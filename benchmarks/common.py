@@ -1,0 +1,111 @@
+"""Shared benchmark machinery: cached simulator runs + CSV emission.
+
+All paper-figure benchmarks run the JAX packet-level simulator at reduced
+scale (CPU budget): 8 hosts instead of 144, ~2000 messages per run. The
+qualitative claims being validated (protocol ordering, slowdown bands,
+utilization ceilings, queue bounds) are scale-robust; EXPERIMENTS.md
+discusses the deltas. `--full` increases scale.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.sim import SimConfig, run_sim, slowdown_percentiles
+from repro.core.workloads import make_messages
+from repro.core.priorities import allocate_priorities, PriorityAllocation
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "bench"
+ART.mkdir(parents=True, exist_ok=True)
+
+DEFAULT = dict(n_hosts=8, n_messages=2000, max_slots=60_000, ring_cap=2048,
+               slot_bytes=256)
+
+
+def sim_run(*, workload: str, protocol: str, load: float, seed: int = 0,
+            n_hosts=None, n_messages=None, max_slots=None, ring_cap=None,
+            slot_bytes=None, overcommit=None, alloc: dict | None = None,
+            unsched_limit_bytes=None, cache: bool = True) -> dict:
+    """Run (or fetch cached) one simulation; returns JSON-safe summary."""
+    p = {**DEFAULT}
+    for k, v in dict(n_hosts=n_hosts, n_messages=n_messages,
+                     max_slots=max_slots, ring_cap=ring_cap,
+                     slot_bytes=slot_bytes).items():
+        if v is not None:
+            p[k] = v
+    keyd = dict(workload=workload, protocol=protocol, load=load, seed=seed,
+                overcommit=overcommit, alloc=alloc,
+                ul=(unsched_limit_bytes if not isinstance(
+                    unsched_limit_bytes, np.ndarray) else "array"), **p)
+    h = hashlib.sha1(json.dumps(keyd, sort_keys=True).encode()).hexdigest()[:16]
+    fp = ART / f"sim_{h}.json"
+    if cache and fp.exists():
+        return json.loads(fp.read_text())
+
+    tbl = make_messages(workload, n_hosts=p["n_hosts"], load=load,
+                        n_messages=p["n_messages"],
+                        slot_bytes=p["slot_bytes"], seed=seed)
+    cfg = SimConfig(n_hosts=p["n_hosts"], slot_bytes=p["slot_bytes"],
+                    protocol=protocol, overcommit=overcommit,
+                    ring_cap=p["ring_cap"],
+                    max_slots=min(p["max_slots"],
+                                  int(tbl.arrival_slot.max()) + 20_000))
+    al = None
+    if alloc:
+        al = PriorityAllocation(n_prios=alloc.get("n_prios", 8),
+                                n_unsched=alloc["n_unsched"],
+                                cutoffs=tuple(alloc.get("cutoffs", ())),
+                                unsched_bytes_frac=0.0)
+    stats = run_sim(cfg, tbl, alloc=al,
+                    unsched_limit_bytes=unsched_limit_bytes)
+
+    # summarize (steady-state window: drop first 10% of arrivals)
+    warm = stats["size_bytes"].shape[0] // 10
+    ok = stats["done"].copy()
+    ok[:warm] = False
+    sl = stats["slowdown"]
+    out = {
+        "params": keyd,
+        "n_complete": stats["n_complete"],
+        "n_messages": stats["n_messages"],
+        "completion_rate": float(stats["done"].mean()),
+        "p99_by_size": slowdown_percentiles(
+            {**stats, "done": ok}, 99.0),
+        "busy_frac": float(np.mean(stats["busy_frac"])),
+        "wasted_frac": float(np.mean(stats["wasted_frac"])),
+        "q_mean_bytes": float(np.mean(stats["q_mean_bytes"])),
+        "q_max_bytes": float(np.max(stats["q_max_bytes"])),
+        "prio_drained_bytes": [int(x) for x in stats["prio_drained_bytes"]],
+        "lost_chunks": stats["lost_chunks"],
+        "alloc": {"n_unsched": stats["alloc"].n_unsched,
+                  "cutoffs": list(stats["alloc"].cutoffs),
+                  "unsched_frac": stats["alloc"].unsched_bytes_frac},
+        "p99_small": _pct(sl, ok & (stats["size_bytes"] < 1000), 99),
+        "p50_small": _pct(sl, ok & (stats["size_bytes"] < 1000), 50),
+        "p99_all": _pct(sl, ok, 99),
+        "p50_all": _pct(sl, ok, 50),
+    }
+    fp.write_text(json.dumps(out))
+    return out
+
+
+def _pct(sl, mask, q):
+    if mask.sum() == 0:
+        return None
+    return float(np.percentile(sl[mask], q))
+
+
+def emit(name: str, rows: list[dict]):
+    """Print CSV rows and save them under artifacts/bench/<name>.json."""
+    if not rows:
+        print(f"# {name}: no rows")
+        return
+    cols = list(rows[0].keys())
+    print(f"# --- {name} ---")
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r.get(c, "")) for c in cols))
+    (ART / f"{name}.json").write_text(json.dumps(rows, indent=1))

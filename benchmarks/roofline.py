@@ -1,0 +1,139 @@
+"""Roofline analysis over the dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds per step (per device):
+
+    compute    = FLOPs_dev / 197e12        (bf16 peak per v5e chip)
+    memory     = HBM_bytes_dev / 819e9
+    collective = collective_bytes_dev / 50e9   (per-chip ICI link bw)
+
+Sources:
+- FLOPs/bytes/collectives come from *measured* compiled artifacts. XLA's
+  cost analysis counts a while-loop body once, so the measurement artifacts
+  are compiled with unrolled scans (``--unroll``); for deep models we
+  compile depth-reduced variants (``--nblocks 1|2``) and extrapolate
+  affinely (cost(nb) = head + body*nb — exact, since every scan block is
+  identical). Memory footprint comes from the default (scan) artifact,
+  whose buffer allocation matches production.
+- MODEL_FLOPS = 6*N*D (train) / 2*N_active*D (decode/prefill fwd), reported
+  as the useful-compute ratio against measured HLO FLOPs.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def _load(name):
+    p = ART / name
+    if p.exists():
+        d = json.loads(p.read_text())
+        return d if d.get("status") == "ok" else None
+    return None
+
+
+def measured_totals(arch: str, shape: str, mesh: str):
+    """(flops, bytes_accessed, collective_bytes) per device, from unrolled
+    artifacts — direct or affine-extrapolated from nb=1,2."""
+    full = _load(f"{arch}__{shape}__{mesh}__unrolled.json")
+    if full:
+        return (full["cost"].get("flops"),
+                full["cost"].get("bytes accessed"),
+                full["collectives"]["total_bytes"], "unrolled")
+    nb1 = _load(f"{arch}__{shape}__{mesh}__unrolled__nb1.json")
+    nb2 = _load(f"{arch}__{shape}__{mesh}__unrolled__nb2.json")
+    if nb1 and nb2:
+        nb_full = nb1["n_scan_blocks_full"]
+
+        def extra(key, sub=None):
+            a = (nb1["cost"][key] if sub is None
+                 else nb1[sub]["total_bytes"])
+            b = (nb2["cost"][key] if sub is None
+                 else nb2[sub]["total_bytes"])
+            body = b - a
+            head = a - body
+            return head + body * nb_full
+        vals = (extra("flops"), extra("bytes accessed"),
+                extra(None, "collectives"))
+        # affine extrapolation requires cost(nb2) >= cost(nb1); XLA may
+        # special-case single-iteration graphs — fall back when violated
+        if all(v is not None and v > 0 for v in vals):
+            return (*vals, "extrapolated(nb1,nb2)")
+    return None, None, None, "missing"
+
+
+def model_flops_per_device(d: dict) -> float:
+    n = d["n_active_params"]
+    toks = d["tokens_per_step"]
+    mult = 6 if d["kind"] == "train" else 2
+    return mult * n * toks / d["n_chips"]
+
+
+def analyze_cell(arch: str, shape: str, mesh: str):
+    base = _load(f"{arch}__{shape}__{mesh}.json")
+    if base is None:
+        return None
+    flops, habytes, coll, src = measured_totals(arch, shape, mesh)
+    if flops is None:
+        # fall back: analytic flops, scan-artifact bytes (lower bounds)
+        flops = model_flops_per_device(base)
+        habytes = base["cost"].get("bytes accessed", 0)
+        coll = base["collectives"]["total_bytes"]
+        src = "analytic-fallback"
+    t_comp = flops / PEAK_FLOPS
+    t_mem = habytes / HBM_BW
+    t_coll = coll / LINK_BW
+    dominant = max((t_comp, "compute"), (t_mem, "memory"),
+                   (t_coll, "collective"))[1]
+    mf = model_flops_per_device(base)
+    mem = base.get("memory", {})
+    hbm_resident = (mem.get("argument_size_in_bytes", 0)
+                    + mem.get("temp_size_in_bytes", 0))
+    return {
+        "arch": arch, "shape": shape, "mesh": mesh, "source": src,
+        "t_compute_s": t_comp, "t_memory_s": t_mem,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops_dev": mf, "hlo_flops_dev": flops,
+        "useful_ratio": mf / flops if flops else None,
+        "roofline_frac": t_comp / max(t_comp, t_mem, t_coll)
+        if max(t_comp, t_mem, t_coll) else None,
+        "hbm_resident_gb": hbm_resident / 1e9,
+        "fits_hbm16": hbm_resident <= 16e9,
+        "compile_s": base.get("compile_s"),
+        "notes": ";".join(base.get("sharding_notes", [])),
+    }
+
+
+def main():
+    from repro.configs import ARCH_NAMES
+    from repro.configs.base import SHAPES, cell_is_skipped
+    rows = []
+    meshes = sys.argv[1:] or ["16x16"]
+    for arch in ARCH_NAMES:
+        for shape in SHAPES:
+            if cell_is_skipped(arch, shape):
+                continue
+            for mesh in meshes:
+                r = analyze_cell(arch, shape, mesh)
+                if r:
+                    rows.append(r)
+    cols = ["arch", "shape", "mesh", "t_compute_s", "t_memory_s",
+            "t_collective_s", "dominant", "roofline_frac", "useful_ratio",
+            "hbm_resident_gb", "fits_hbm16", "source"]
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(
+            f"{r[c]:.4g}" if isinstance(r[c], float) else str(r[c])
+            for c in cols))
+    out = ART.parent / "roofline.json"
+    out.write_text(json.dumps(rows, indent=1))
+    print(f"# wrote {out} ({len(rows)} cells)", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

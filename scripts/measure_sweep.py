@@ -1,0 +1,23 @@
+"""Measurement sweep: depth-reduced unrolled cells (nb=1,2) per non-skipped
+(arch x shape) on the single-pod mesh, for exact-affine extrapolation of
+FLOPs / bytes / collective bytes (see benchmarks/roofline.py)."""
+import os, subprocess, sys, json
+sys.path.insert(0, "src")
+from repro.configs import ARCH_NAMES
+from repro.configs.base import SHAPES, cell_is_skipped
+
+cells = [(a, s) for a in ARCH_NAMES for s in SHAPES if not cell_is_skipped(a, s)]
+fails = []
+for a, s in cells:
+    for nb in (1, 2):
+        out = f"artifacts/dryrun/{a}__{s}__16x16__unrolled__nb{nb}.json"
+        if os.path.exists(out):
+            print("[cached]", out); continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", a,
+               "--shape", s, "--unroll", "--nblocks", str(nb)]
+        print("[run]", a, s, "nb", nb, flush=True)
+        r = subprocess.run(cmd, capture_output=True, text=True, timeout=3000,
+                           env={**os.environ, "PYTHONPATH": "src"})
+        if r.returncode != 0:
+            fails.append((a, s, nb)); print(r.stderr[-500:])
+print("failures:", fails)

@@ -1,0 +1,38 @@
+"""Config registry. One module per assigned architecture."""
+import importlib
+
+from repro.configs.base import (  # noqa: F401
+    ModelConfig, ShapeConfig, SHAPES, get_config, all_configs, register,
+    cell_is_skipped, SKIPPED_CELLS,
+)
+
+_ARCH_MODULES = [
+    "mamba2_130m",
+    "whisper_small",
+    "stablelm_12b",
+    "llama3_2_3b",
+    "llama3_405b",
+    "qwen2_7b",
+    "mixtral_8x7b",
+    "deepseek_v2_lite_16b",
+    "jamba_1_5_large_398b",
+    "llama_3_2_vision_90b",
+]
+
+_loaded = False
+
+
+def load_all() -> None:
+    global _loaded
+    if _loaded:
+        return
+    _loaded = True
+    for m in _ARCH_MODULES:
+        importlib.import_module(f"repro.configs.{m}")
+
+
+ARCH_NAMES = [
+    "mamba2-130m", "whisper-small", "stablelm-12b", "llama3.2-3b",
+    "llama3-405b", "qwen2-7b", "mixtral-8x7b", "deepseek-v2-lite-16b",
+    "jamba-1.5-large-398b", "llama-3.2-vision-90b",
+]

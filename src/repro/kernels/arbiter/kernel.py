@@ -1,0 +1,139 @@
+"""Homa switch-arbitration Pallas TPU kernels — the simulator's per-slot hot
+spots, TPU-ified (DESIGN.md §5): the "switch egress port" becomes a
+vectorized arbitration kernel over the chunk buffer.
+
+1. ``priority_arbiter``: per receiver row, select the buffered chunk to drain:
+   strict priority, FIFO (insertion sequence) within a level. Lexicographic
+   masked argmin over (prio, seq), tiled over buffer blocks with the running
+   best carried in VMEM scratch.
+
+2. ``srpt_topk``: per receiver row, the K messages with the best (largest)
+   key — Homa's overcommitment grant set (top-K SRPT). Iterated masked max
+   with running top-K registers in scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BIG = 2 ** 30   # plain int: jnp constants would be captured as kernel operands
+
+
+# ------------------------------------------------------ priority arbiter ---
+
+def _arb_kernel(prio_ref, seq_ref, elig_ref, prio_out, idx_out,
+                bp_scr, bs_scr, bi_scr, *, bc: int, ncap: int):
+    # NB pallas binds (*ins, *outs, *scratch) — outputs before scratch
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        bp_scr[...] = jnp.full_like(bp_scr, BIG)
+        bs_scr[...] = jnp.full_like(bs_scr, BIG)
+        bi_scr[...] = jnp.zeros_like(bi_scr)
+
+    elig = elig_ref[...]
+    p = jnp.where(elig, prio_ref[...], BIG)                 # (bh, bc)
+    s = jnp.where(elig, seq_ref[...], BIG)
+
+    # local lexicographic argmin within the block
+    pmin = jnp.min(p, axis=1)                               # (bh,)
+    s_cand = jnp.where(p == pmin[:, None], s, BIG)
+    smin = jnp.min(s_cand, axis=1)
+    col = jnp.argmin(s_cand, axis=1).astype(jnp.int32) + ci * bc
+
+    # merge with running best
+    bp, bs = bp_scr[...], bs_scr[...]
+    better = (pmin < bp) | ((pmin == bp) & (smin < bs))
+    bp_scr[...] = jnp.where(better, pmin, bp)
+    bs_scr[...] = jnp.where(better, smin, bs)
+    bi_scr[...] = jnp.where(better, col, bi_scr[...])
+
+    @pl.when(ci == ncap - 1)
+    def _fin():
+        prio_out[...] = bp_scr[...]
+        idx_out[...] = bi_scr[...]
+
+
+def priority_arbiter(prio, seq, elig, *, block_h: int = 8,
+                     block_c: int = 256, interpret: bool = False):
+    """prio/seq: (H, cap) int32; elig: (H, cap) bool.
+    Returns (best_prio (H,), best_idx (H,)); best_prio == BIG if none."""
+    H, cap = prio.shape
+    bh = min(block_h, H)
+    bc = min(block_c, cap)
+    assert H % bh == 0 and cap % bc == 0
+    ncap = cap // bc
+
+    kernel = functools.partial(_arb_kernel, bc=bc, ncap=ncap)
+    return pl.pallas_call(
+        kernel,
+        grid=(H // bh, ncap),
+        in_specs=[pl.BlockSpec((bh, bc), lambda hi, ci: (hi, ci)),
+                  pl.BlockSpec((bh, bc), lambda hi, ci: (hi, ci)),
+                  pl.BlockSpec((bh, bc), lambda hi, ci: (hi, ci))],
+        out_specs=[pl.BlockSpec((bh,), lambda hi, ci: (hi,)),
+                   pl.BlockSpec((bh,), lambda hi, ci: (hi,))],
+        out_shape=[jax.ShapeDtypeStruct((H,), jnp.int32),
+                   jax.ShapeDtypeStruct((H,), jnp.int32)],
+        # NB: distinct scratch objects — a repeated instance would alias
+        scratch_shapes=[pltpu.VMEM((bh,), jnp.int32),
+                        pltpu.VMEM((bh,), jnp.int32),
+                        pltpu.VMEM((bh,), jnp.int32)],
+        interpret=interpret,
+    )(prio, seq, elig)
+
+
+# ---------------------------------------------------------- SRPT top-K -----
+
+def _topk_kernel(key_ref, out_ref, top_scr, *, K: int, nm: int):
+    mi = pl.program_id(1)
+
+    @pl.when(mi == 0)
+    def _init():
+        top_scr[...] = jnp.zeros_like(top_scr)
+
+    k = key_ref[...]                                        # (bh, bm) int32
+    # merge block into running top-K: combine candidates, extract K maxima.
+    # Keys are strictly positive for eligible entries, so 0 is the neutral
+    # "taken/absent" value.
+    cand = jnp.concatenate([top_scr[...], k], axis=1)       # (bh, K+bm)
+    tops = top_scr[...]
+    for r in range(K):
+        m = jnp.max(cand, axis=1)                           # (bh,)
+        tops = tops.at[:, r].set(m)
+        is_m = cand == m[:, None]
+        first = jnp.cumsum(is_m.astype(jnp.int32), axis=1) == 1
+        cand = jnp.where(is_m & first, jnp.int32(0), cand)
+
+    top_scr[...] = tops
+
+    @pl.when(mi == nm - 1)
+    def _fin():
+        out_ref[...] = top_scr[...]
+
+
+def srpt_topk(keys, K: int, *, block_h: int = 8, block_m: int = 512,
+              interpret: bool = False):
+    """keys: (H, M) int32, 0 = ineligible, larger = more urgent.
+    Returns (H, K) int32 of the K largest keys per row (0-padded)."""
+    H, M = keys.shape
+    bh = min(block_h, H)
+    bm = min(block_m, M)
+    assert H % bh == 0 and M % bm == 0
+    nm = M // bm
+
+    kernel = functools.partial(_topk_kernel, K=K, nm=nm)
+    return pl.pallas_call(
+        kernel,
+        grid=(H // bh, nm),
+        in_specs=[pl.BlockSpec((bh, bm), lambda hi, mi: (hi, mi))],
+        out_specs=pl.BlockSpec((bh, K), lambda hi, mi: (hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((H, K), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bh, K), jnp.int32)],
+        interpret=interpret,
+    )(keys)

@@ -1,0 +1,43 @@
+"""Jit'd wrappers for the arbitration kernels (pad rows/cols to block
+multiples; interpret mode for CPU validation)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.arbiter.kernel import priority_arbiter, srpt_topk, BIG
+
+
+def _pad_rows(x, bh, fill):
+    H = x.shape[0]
+    p = (-H) % bh
+    return jnp.pad(x, ((0, p),) + ((0, 0),) * (x.ndim - 1),
+                   constant_values=fill), H
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def arbitrate(prio, seq, elig, *, interpret: bool = False):
+    H, cap = prio.shape
+    bh = 8 if H % 8 == 0 else (H if H <= 8 else 1)
+    bc = 256 if cap % 256 == 0 else cap
+    pp, H0 = _pad_rows(prio, bh, BIG)
+    sp, _ = _pad_rows(seq, bh, BIG)
+    ep, _ = _pad_rows(elig, bh, False)
+    bp, bi = priority_arbiter(pp, sp, ep, block_h=bh, block_c=bc,
+                              interpret=interpret)
+    return bp[:H0], bi[:H0]
+
+
+@partial(jax.jit, static_argnames=("K", "interpret"))
+def topk(keys, K: int, *, interpret: bool = False):
+    H, M = keys.shape
+    if M < K:   # fewer candidates than K: pad columns with ineligible zeros
+        keys = jnp.pad(keys, ((0, 0), (0, K - M)))
+        M = K
+    bh = 8 if H % 8 == 0 else (H if H <= 8 else 1)
+    bm = 512 if M % 512 == 0 else M
+    kp, H0 = _pad_rows(keys, bh, 0)
+    out = srpt_topk(kp, K, block_h=bh, block_m=bm, interpret=interpret)
+    return out[:H0]

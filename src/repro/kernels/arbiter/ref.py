@@ -1,0 +1,27 @@
+"""Pure-jnp oracles for the arbitration kernels (the same math the simulator
+uses inline)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+BIG = jnp.int32(2 ** 30)
+
+
+def priority_arbiter_ref(prio, seq, elig):
+    """Strict-priority, FIFO-within-level selection per row.
+    Returns (best_prio (H,), best_idx (H,))."""
+    p = jnp.where(elig, prio, BIG)
+    s = jnp.where(elig, seq, BIG)
+    pmin = p.min(axis=1)
+    s_cand = jnp.where(p == pmin[:, None], s, BIG)
+    idx = jnp.argmin(s_cand, axis=1).astype(jnp.int32)
+    return pmin, idx
+
+
+def srpt_topk_ref(keys, K: int):
+    """K largest keys per row (descending, 0-padded)."""
+    if keys.shape[1] < K:
+        keys = jnp.pad(keys, ((0, 0), (0, K - keys.shape[1])))
+    vals, _ = lax.top_k(keys, K)
+    return jnp.maximum(vals, 0).astype(jnp.int32)

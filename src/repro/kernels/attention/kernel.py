@@ -1,0 +1,110 @@
+"""Flash attention Pallas TPU kernel: online-softmax, blockwise K/V streaming.
+
+Grid: (B, H, num_q_blocks, num_kv_blocks) — the KV dimension is minor, so on
+TPU the iterations for one (b, h, qi) run sequentially and the running
+(m, l, acc) state lives in VMEM scratch across them. Q/K/V/O blocks are tiled
+via BlockSpec into VMEM; MXU-aligned block sizes (multiples of 128) are
+enforced by the ops.py wrapper.
+
+Supports causal masking, sliding windows, and GQA (q-head -> kv-head mapping
+in the K/V index_maps).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                 scale: float, causal: bool, window: int | None,
+                 bq: int, bk: int, nk: int, kv_len: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+
+    run = True
+    if causal:
+        run = (ki * bk) <= (qi * bq + bq - 1)   # block not fully above diag
+
+    @pl.when(run if causal else True)
+    def _body():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)          # (bq, d)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)          # (bk, d)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)          # (bk, dv)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        mask = k_pos < kv_len
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _fin():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: int | None = None, scale: float | None = None,
+                    block_q: int = 128, block_kv: int = 128,
+                    kv_len: int | None = None, interpret: bool = False):
+    """q: (B, Sq, H, d); k/v: (B, Skv, KV, d/dv), Sq % block_q == 0,
+    Skv % block_kv == 0, H % KV == 0. Returns (B, Sq, H, dv)."""
+    B, Sq, H, d = q.shape
+    _, Skv, KV, dv = v.shape
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    kv_len = Skv if kv_len is None else kv_len
+    nq, nk = Sq // block_q, Skv // block_kv
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, window=window,
+        bq=block_q, bk=block_kv, nk=nk, kv_len=kv_len)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, d), lambda b, h, qi, ki: (b, qi, h, 0)),
+            pl.BlockSpec((1, block_kv, 1, d),
+                         lambda b, h, qi, ki, G=G: (b, ki, h // G, 0)),
+            pl.BlockSpec((1, block_kv, 1, dv),
+                         lambda b, h, qi, ki, G=G: (b, ki, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, dv),
+                               lambda b, h, qi, ki: (b, qi, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sq, H, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),        # m
+            pltpu.VMEM((block_q,), jnp.float32),        # l
+            pltpu.VMEM((block_q, dv), jnp.float32),     # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,30 @@
+"""Jit'd public wrapper for the flash attention kernel: pads sequence dims to
+block multiples, picks MXU-aligned blocks, exposes interpret mode for CPU."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.attention.kernel import flash_attention
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_kv",
+                                   "interpret"))
+def attention(q, k, v, *, causal: bool = True, window: int | None = None,
+              block_q: int = 128, block_kv: int = 128,
+              interpret: bool = False):
+    B, Sq, H, d = q.shape
+    _, Skv, KV, dv = v.shape
+    bq = min(block_q, max(8, Sq))
+    bk = min(block_kv, max(8, Skv))
+    pq = (-Sq) % bq
+    pk = (-Skv) % bk
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0))) if pq else q
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk else k
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk else v
+    out = flash_attention(qp, kp, vp, causal=causal, window=window,
+                          block_q=bq, block_kv=bk, kv_len=Skv,
+                          interpret=interpret)
+    return out[:, :Sq]

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None,
+                  scale: float | None = None, kv_len: int | None = None):
+    """Naive attention. q: (B,Sq,H,d); k/v: (B,Skv,KV,d|dv). f32 math."""
+    B, Sq, H, d = q.shape
+    _, Skv, KV, dv = v.shape
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    kv_len = Skv if kv_len is None else kv_len
+
+    qf = q.astype(jnp.float32).reshape(B, Sq, KV, G, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bjkd->bqkgj", qf, kf) * scale
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Skv)[None, :]
+    mask = k_pos < kv_len
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window is not None:
+        mask = mask & (k_pos > q_pos - window)
+    s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    o = jnp.einsum("bqkgj,bjkd->bqkgd", p, vf)
+    return o.reshape(B, Sq, H, dv).astype(q.dtype)

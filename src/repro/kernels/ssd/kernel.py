@@ -1,0 +1,100 @@
+"""Mamba2 SSD (state-space duality) Pallas TPU kernel.
+
+Chunked dual form: grid (B, H, num_chunks) with the chunk dimension minor —
+iterations for one (b, h) run sequentially on TPU, so the running inter-chunk
+state (P x N) lives in VMEM scratch. Per chunk:
+
+    y = tril(CB^T * decay) @ (dt*x)  +  (C * decay_in) @ state
+    state = decay_chunk * state + B^T @ (dt * decay_out * x)
+
+Inputs follow repro.models.ssm.ssd_chunked layout: x (B,S,H,P), dt (B,S,H),
+A (H,), Bm/Cm (B,S,N). Output y (B,S,H,P) f32 + final state (B,H,P,N).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, fs_ref, st_scr, *,
+                chunk: int, nc: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        st_scr[...] = jnp.zeros_like(st_scr)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)        # (L, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)         # (L,)
+    a = a_ref[0]                                     # scalar A_h
+    bm = b_ref[0].astype(jnp.float32)                # (L, N)
+    cm = c_ref[0].astype(jnp.float32)                # (L, N)
+
+    dA = dt * a                                      # (L,)
+    cums = jnp.cumsum(dA)                            # (L,)
+
+    # intra-chunk: att[i,j] = (C_i . B_j) * exp(cums_i - cums_j) * dt_j, i>=j
+    diff = cums[:, None] - cums[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.where(ii >= jj, jnp.exp(diff), 0.0)
+    cb = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    att = cb * decay * dt[None, :]
+    y = jax.lax.dot_general(att, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # inter-chunk contribution from the carried state
+    state = st_scr[...]                              # (P, N)
+    y += jnp.exp(cums)[:, None] * jax.lax.dot_general(
+        cm, state, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    # state update: state' = exp(sum dA) * state + sum_j w_j * x_j B_j^T
+    w = dt * jnp.exp(cums[-1] - cums)                # (L,)
+    upd = jax.lax.dot_general(x * w[:, None], bm, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (P, N)
+    st_scr[...] = jnp.exp(cums[-1]) * state + upd
+
+    @pl.when(ci == nc - 1)
+    def _fin():
+        fs_ref[0, 0, :, :] = st_scr[...]
+
+
+def ssd_pallas(x, dt, A, Bm, Cm, *, chunk: int = 128,
+               interpret: bool = False):
+    """x: (B,S,H,P); dt: (B,S,H); A: (H,); Bm/Cm: (B,S,N). S % chunk == 0.
+    Returns (y (B,S,H,P) f32, final_state (B,H,P,N) f32)."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0
+    nc = S // chunk
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, nc=nc)
+    y, fs = pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, ci: (b, ci, h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, h, ci: (b, ci, h)),
+            pl.BlockSpec((1,), lambda b, h, ci: (h,)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, ci: (b, ci, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, ci: (b, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, ci: (b, ci, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, ci: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A.astype(jnp.float32), Bm, Cm)
+    return y, fs

@@ -1,0 +1,23 @@
+"""Jit'd wrapper for the SSD kernel: pads the sequence to a chunk multiple."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd.kernel import ssd_pallas
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, dt, A, Bm, Cm, *, chunk: int = 128, interpret: bool = False):
+    B, S, H, P = x.shape
+    c = min(chunk, S) if S % min(chunk, S) == 0 else chunk
+    pad = (-S) % c
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    y, fs = ssd_pallas(x, dt, A, Bm, Cm, chunk=c, interpret=interpret)
+    return y[:, :S], fs

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the SSD kernel: the sequential per-token recurrence.
+
+    state_t = exp(dt_t * A) * state_{t-1} + dt_t * B_t (x) x_t
+    y_t     = C_t . state_t
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def ssd_ref(x, dt, A, Bm, Cm):
+    """x: (B,S,H,P); dt: (B,S,H); A: (H,); Bm/Cm: (B,S,N).
+    Returns (y (B,S,H,P) f32, final_state (B,H,P,N) f32)."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp                       # (B,H,P),(B,H),(B,N),(B,N)
+        decay = jnp.exp(dtt * Af)                   # (B,H)
+        upd = jnp.einsum("bn,bhp->bhpn", bt, xt * dtt[..., None])
+        state = state * decay[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", state, ct)
+        return state, y
+
+    init = jnp.zeros((B, H, P, N), jnp.float32)
+    final, ys = lax.scan(step, init,
+                         (xf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2),
+                          Bf.transpose(1, 0, 2), Cf.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2, 3), final

@@ -1,0 +1,272 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell and
+record memory/cost/collective artifacts for the roofline analysis.
+
+The two lines above MUST run before any jax import (jax locks the device
+count on first init); do not move them. Run one cell:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-3b \
+        --shape train_4k [--multi-pod]
+
+or the full sweep (spawns one subprocess per cell so compiles are isolated):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+ARTIFACT_DIR = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of all shapes in an HLO result-type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Per-device bytes moved by collectives, from optimized HLO.
+
+    For each collective op we count the *result* shape bytes (an upper bound
+    on per-device wire traffic; for all-reduce it equals 2x(n-1)/n of the
+    ring cost which we fold into the link-bandwidth constant)."""
+    out = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if s.startswith("%") or s.startswith("ROOT"):
+            m = re.search(r"=\s*(.+?)\s+(%?[\w-]+)\(", s)
+            if not m:
+                continue
+            result_type, opname = m.group(1), m.group(2).lstrip("%")
+            base = opname.split(".")[0]
+            # strip "-start"/"-done" async suffixes
+            for k in _COLLECTIVES:
+                if base == k or base == k + "-start":
+                    out[k]["count"] += 1
+                    out[k]["bytes"] += _shape_bytes(result_type)
+                    break
+    out["total_bytes"] = sum(v["bytes"] for v in out.values()
+                             if isinstance(v, dict))
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             unroll: bool = False, nblocks: int | None = None,
+             mem_opt: bool = False, accum: int | None = None) -> dict:
+    import jax
+    from repro.configs import get_config, SHAPES, cell_is_skipped
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.inputs import input_specs
+    from repro.training.optimizer import OptConfig
+    from repro.training.step import build_train_step, build_serve_step, \
+        build_prefill_step
+    from repro.distrib import sharding as SH
+    from repro.models import model as M
+
+    skip = cell_is_skipped(arch, shape_name)
+    if skip:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "skipped", "reason": skip, "unroll": unroll}
+
+    cfg = get_config(arch)
+    if nblocks is not None:
+        # depth-reduced variant for linear extrapolation of per-layer cost:
+        # totals are affine in the number of scan blocks (see roofline.py)
+        import dataclasses
+        cfg = dataclasses.replace(
+            cfg, num_layers=cfg.first_dense_layers
+            + nblocks * cfg.block_period)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+
+    specs = input_specs(cfg, shape, mesh)
+    notes = SH.check_divisibility(cfg, mesh, shape)
+
+    if shape.kind == "train":
+        import jax.numpy as jnp
+        oc = OptConfig(state_dtype=jnp.bfloat16) if mem_opt else OptConfig()
+        # unroll: unrolled layer + accumulation scans (production microbatch
+        # count) so cost_analysis counts every layer, microbatch, collective
+        step = build_train_step(cfg, oc, mesh=mesh, shape=shape,
+                                unroll=unroll, grad_accum=accum,
+                                accum_dtype=jnp.bfloat16 if mem_opt
+                                else jnp.float32)
+        from repro.launch.inputs import opt_state_structs
+        specs["opt_state"] = opt_state_structs(cfg, mesh, oc)
+        args = (specs["params"], specs["opt_state"], specs["batch"])
+    elif shape.kind == "prefill":
+        step = build_prefill_step(cfg, mesh=mesh, shape=shape, unroll=unroll)
+        args = (specs["params"], specs["batch"])
+    else:  # decode
+        step = build_serve_step(cfg, pos=shape.seq_len - 1, unroll=unroll)
+        args = (specs["params"], specs["caches"], specs["token"], 0)
+
+    with mesh:
+        lowered = jax.jit(step, static_argnums=(3,) if shape.kind == "decode"
+                          else ()).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(ma, k, None)
+            if v is not None:
+                mem[k] = int(v)
+    except Exception as e:  # noqa: BLE001
+        mem["error"] = str(e)
+
+    cost = {}
+    try:
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+        for k, v in ca.items():
+            if k in ("flops", "bytes accessed", "transcendentals") or \
+                    k.startswith("bytes accessed"):
+                cost[k] = float(v)
+    except Exception as e:  # noqa: BLE001
+        cost["error"] = str(e)
+
+    hlo = compiled.as_text()
+    coll = parse_collective_bytes(hlo)
+
+    n_chips = mesh.devices.size
+    n_params = M.count_model_params(cfg)
+    n_active = M.active_params(cfg)
+
+    res = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "multi_pod": multi_pod, "status": "ok", "unroll": unroll,
+        "mem_opt": mem_opt,
+        "n_chips": n_chips,
+        "n_params": n_params, "n_active_params": n_active,
+        "tokens_per_step": shape.global_batch * (1 if shape.is_decode
+                                                 else shape.seq_len),
+        "kind": shape.kind, "nblocks": nblocks,
+        "n_scan_blocks_full": (get_config(arch).num_layers
+                               - get_config(arch).first_dense_layers)
+        // get_config(arch).block_period,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": mem, "cost": cost, "collectives": coll,
+        "sharding_notes": notes,
+        "hlo_bytes": len(hlo),
+    }
+    return res
+
+
+def cell_path(arch: str, shape: str, multi_pod: bool,
+              unroll: bool = False, nblocks: int | None = None,
+              mem_opt: bool = False, accum: int | None = None) -> Path:
+    mesh = "2x16x16" if multi_pod else "16x16"
+    sfx = "__unrolled" if unroll else ""
+    if nblocks is not None:
+        sfx += f"__nb{nblocks}"
+    if mem_opt:
+        sfx += "__memopt"
+    if accum is not None:
+        sfx += f"__acc{accum}"
+    return ARTIFACT_DIR / f"{arch}__{shape}__{mesh}{sfx}.json"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--unroll", action="store_true",
+                    help="measurement mode: unrolled scans, accum=1")
+    ap.add_argument("--nblocks", type=int, default=None,
+                    help="depth-reduced variant (for extrapolation)")
+    ap.add_argument("--mem-opt", action="store_true",
+                    help="bf16 optimizer states + bf16 grad accumulation")
+    ap.add_argument("--accum", type=int, default=None,
+                    help="override microbatch count")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true",
+                    help="recompute cached cells")
+    ap.add_argument("--timeout", type=int, default=3000)
+    args = ap.parse_args()
+    ARTIFACT_DIR.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        import subprocess
+        from repro.configs import ARCH_NAMES
+        from repro.configs.base import SHAPES
+        cells = [(a, s, mp) for a in ARCH_NAMES for s in SHAPES
+                 for mp in (False, True)]
+        failures = []
+        for a, s, mp in cells:
+            out = cell_path(a, s, mp)
+            if out.exists() and not args.force:
+                print(f"[cached] {out.name}")
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", a, "--shape", s] + (["--multi-pod"] if mp else [])
+            print(f"[run] {a} x {s} x {'2x16x16' if mp else '16x16'}",
+                  flush=True)
+            r = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=args.timeout,
+                               env={**os.environ, "PYTHONPATH": "src"})
+            if r.returncode != 0:
+                failures.append((a, s, mp, r.stderr[-2000:]))
+                print(r.stderr[-2000:])
+        print(f"done; {len(failures)} failures")
+        for f in failures:
+            print("FAIL:", f[:3])
+        sys.exit(1 if failures else 0)
+
+    try:
+        res = run_cell(args.arch, args.shape, args.multi_pod, args.unroll,
+                       args.nblocks, args.mem_opt, args.accum)
+    except Exception:  # noqa: BLE001
+        res = {"arch": args.arch, "shape": args.shape,
+               "multi_pod": args.multi_pod, "status": "error",
+               "traceback": traceback.format_exc()}
+    out = cell_path(args.arch, args.shape, args.multi_pod, args.unroll,
+                    args.nblocks, args.mem_opt, args.accum)
+    out.write_text(json.dumps(res, indent=2))
+    if res["status"] == "ok":
+        print(json.dumps({k: res[k] for k in
+                          ("arch", "shape", "mesh", "compile_s", "cost",
+                           "memory")}, indent=2))
+        print("collective bytes/device:", res["collectives"]["total_bytes"])
+    else:
+        print(json.dumps(res, indent=2))
+        if res["status"] == "error":
+            sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""ShapeDtypeStruct stand-ins for every model input: weak-type-correct,
+shardable, no device allocation. Used by the dry-run and the roofline."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distrib import sharding as SH
+from repro.models import model as M
+from repro.models.params import param_shapes, tree_map_defs
+from repro.training.optimizer import OptConfig
+
+
+def _with_sharding(shapes, specs, mesh):
+    return jax.tree.map(
+        lambda s, p: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                          sharding=NamedSharding(mesh, p)),
+        shapes, specs)
+
+
+def param_structs(cfg: ModelConfig, mesh: Mesh):
+    defs = M.model_defs(cfg)
+    shapes = param_shapes(defs)
+    specs = SH.model_param_specs(cfg, mesh)
+    return _with_sharding(shapes, specs, mesh)
+
+
+def opt_state_structs(cfg: ModelConfig, mesh: Mesh,
+                      oc: OptConfig | None = None):
+    oc = oc or OptConfig()
+    p = param_structs(cfg, mesh)
+    mv = jax.tree.map(lambda s: jax.ShapeDtypeStruct(
+        s.shape, oc.state_dtype, sharding=s.sharding), p)
+    step = jax.ShapeDtypeStruct((), jnp.int32,
+                                sharding=NamedSharding(mesh, P()))
+    return {"m": mv, "v": jax.tree.map(lambda x: x, mv), "step": step}
+
+
+def batch_structs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    sizes = SH.mesh_sizes(mesh)
+    bax = SH.batch_axes(sizes, shape.global_batch)
+    bspec = bax if bax else None
+    B, S = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct((B, S), jnp.int32,
+                               sharding=NamedSharding(mesh, P(bspec, None)))
+    out = {"tokens": tok}
+    if shape.kind == "train":
+        out["labels"] = jax.ShapeDtypeStruct(
+            (B, S), jnp.int32, sharding=NamedSharding(mesh, P(bspec, None)))
+    if cfg.is_encoder_decoder:
+        out["enc_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16,
+            sharding=NamedSharding(mesh, P(bspec, None, None)))
+    if cfg.num_image_tokens:
+        out["img_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16,
+            sharding=NamedSharding(mesh, P(bspec, None, None)))
+    return out
+
+
+def cache_structs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    shapes = M.cache_shapes(cfg, shape.global_batch, shape.seq_len)
+    specs = SH.cache_specs(cfg, mesh, shape)
+
+    def build(shp_tree, spec_tree):
+        if isinstance(shp_tree, dict):
+            return {k: build(shp_tree[k], spec_tree[k]) for k in shp_tree}
+        return jax.ShapeDtypeStruct(shp_tree, jnp.bfloat16,
+                                    sharding=NamedSharding(mesh, spec_tree))
+
+    return build(shapes, specs)
+
+
+def input_specs(cfg_or_name, shape: ShapeConfig | str | None = None,
+                mesh: Mesh | None = None):
+    """All dry-run inputs for one (arch, shape) cell."""
+    from repro.configs import get_config, SHAPES
+    cfg = (get_config(cfg_or_name) if isinstance(cfg_or_name, str)
+           else cfg_or_name)
+    shape = SHAPES[shape] if isinstance(shape, str) else shape
+    if mesh is None:
+        from repro.launch.mesh import make_production_mesh
+        mesh = make_production_mesh()
+    sizes = SH.mesh_sizes(mesh)
+    bax = SH.batch_axes(sizes, shape.global_batch)
+    bspec = bax if bax else None
+
+    out = {"params": param_structs(cfg, mesh)}
+    if shape.kind == "train":
+        out["opt_state"] = opt_state_structs(cfg, mesh)
+        out["batch"] = batch_structs(cfg, shape, mesh)
+    elif shape.kind == "prefill":
+        out["batch"] = batch_structs(cfg, shape, mesh)
+    else:
+        out["caches"] = cache_structs(cfg, shape, mesh)
+        out["token"] = jax.ShapeDtypeStruct(
+            (shape.global_batch, 1), jnp.int32,
+            sharding=NamedSharding(mesh, P(bspec, None)))
+        # static cross/encoder inputs for decode already live in caches
+    return out

@@ -1,0 +1,23 @@
+"""Production mesh construction.
+
+A function, not a module-level constant: importing this module never touches
+jax device state. The dry-run sets XLA_FLAGS before any jax import to get 512
+placeholder host devices; everything else sees the real device count.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(*, model: int | None = None):
+    """Small mesh over whatever devices exist (tests / CPU examples)."""
+    n = jax.device_count()
+    m = model or 1
+    assert n % m == 0
+    return jax.make_mesh((n // m, m), ("data", "model"))

@@ -1,0 +1,511 @@
+"""Model layers: norms, RoPE, attention (GQA / MLA / cross / sliding-window),
+MLP, and MoE with sort-based capacity dispatch.
+
+Conventions
+-----------
+- Activations: (B, S, D). Attention heads explicit: q (B, S, H, hd).
+- All matmuls in bf16 with f32 accumulation (`preferred_element_type`).
+- Softmax / norm statistics in f32.
+- Train/prefill attention is *blockwise* (online-softmax scan over KV blocks)
+  so no (S, S) score tensor is ever materialized — this mirrors the Pallas
+  kernel in ``repro.kernels.attention`` and is the portable XLA path.
+- Decode reads a seq-sharded KV cache; softmax reductions over the sharded
+  axis are handled by the SPMD partitioner (all-reduce of max/sum).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamDef
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------- norms ----
+
+def rmsnorm(x, w, eps: float = 1e-5):
+    xf = x.astype(F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def layernorm(x, w, b, eps: float = 1e-5):
+    xf = x.astype(F32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * lax.rsqrt(var + eps)).astype(x.dtype) * w + b
+
+
+def norm_defs(cfg: ModelConfig, dim: int | None = None):
+    d = dim or cfg.d_model
+    if cfg.norm_type == "layernorm":
+        return {"w": ParamDef((d,), (None,), init="ones"),
+                "b": ParamDef((d,), (None,), init="zeros")}
+    return {"w": ParamDef((d,), (None,), init="ones")}
+
+
+def apply_norm(cfg: ModelConfig, p, x):
+    if cfg.norm_type == "layernorm":
+        return layernorm(x, p["w"], p["b"])
+    return rmsnorm(x, p["w"])
+
+
+# ----------------------------------------------------------------- rope ----
+
+def rope_cos_sin(positions, head_dim: int, theta: float):
+    """positions: (...,) int -> cos/sin (..., head_dim/2) in f32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=F32) / head_dim))
+    ang = positions.astype(F32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, hd); cos/sin: (B, S, hd/2) or (S, hd/2).
+
+    Interleaved-pair formulation (default): rotation pairs are (2i, 2i+1),
+    adjacent in memory, so when the head_dim is sharded (the tp2 fallback
+    for non-divisible head counts) every pair stays shard-local and RoPE
+    inserts no resharding collectives — vs the split-half formulation whose
+    partner lanes live hd/2 dims away (= on another shard). Equivalent model
+    class (fixed basis permutation of q/k applied consistently).
+    Default is split-half (classic); REPRO_ROPE=interleaved opts into the
+    shard-local pairing (EXPERIMENTS §Perf It-1: measured ~4% collective
+    win, superseded by the attention-DP fallback, and its activation shift
+    can flip near-tie MoE routing between decode paths)."""
+    import os
+    xf = x.astype(F32)
+    if cos.ndim == 2:  # (S, hd/2) -> broadcast batch
+        cos, sin = cos[None], sin[None]
+    cos, sin = cos[..., None, :], sin[..., None, :]   # (B, S, 1, hd/2)
+    if os.environ.get("REPRO_ROPE") != "interleaved":
+        x1, x2 = jnp.split(xf, 2, axis=-1)
+        return jnp.concatenate([x1 * cos - x2 * sin,
+                                x1 * sin + x2 * cos],
+                               axis=-1).astype(x.dtype)
+    xp = xf.reshape(x.shape[:-1] + (x.shape[-1] // 2, 2))
+    x1, x2 = xp[..., 0], xp[..., 1]
+    out = jnp.stack([x1 * cos - x2 * sin,
+                     x1 * sin + x2 * cos], axis=-1)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+# ----------------------------------------------- blockwise attention ------
+
+def blockwise_attention(q, k, v, *, causal: bool, window: int | None = None,
+                        q_positions=None, kv_positions=None,
+                        block_kv: int = 512, scale: float | None = None):
+    """Online-softmax attention; never materializes (Sq, Skv) scores.
+
+    q: (B, Sq, H, dk);  k: (B, Skv, KV, dk);  v: (B, Skv, KV, dv)
+    GQA handled by grouping q heads over KV heads. Positions default to
+    arange; pass explicit positions for offset decode/prefill windows.
+    Returns (B, Sq, H, dv).
+    """
+    B, Sq, H, dk = q.shape
+    _, Skv, KV, dv = v.shape[0], v.shape[1], v.shape[2], v.shape[3]
+    assert H % KV == 0
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(dk)
+    if q_positions is None:
+        q_positions = jnp.arange(Sq)
+    if kv_positions is None:
+        kv_positions = jnp.arange(Skv)
+
+    # pad KV length to a block multiple
+    nblk = (Skv + block_kv - 1) // block_kv
+    pad = nblk * block_kv - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, (0, pad), constant_values=-1)
+    valid = (kv_positions >= 0) if pad else None
+
+    qg = q.reshape(B, Sq, KV, G, dk)
+    kb = k.reshape(B, nblk, block_kv, KV, dk).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nblk, block_kv, KV, dv).transpose(1, 0, 2, 3, 4)
+    pb = kv_positions.reshape(nblk, block_kv)
+    vmask = (valid.reshape(nblk, block_kv) if valid is not None
+             else jnp.ones((nblk, block_kv), bool))
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kj, vj, pj, okj = blk
+        s = jnp.einsum("bqkgd,bjkd->bqkgj", qg, kj,
+                       preferred_element_type=F32) * scale
+        mask = okj[None, None, None, None, :]
+        if causal:
+            cm = pj[None, :] <= q_positions[:, None]        # (Sq, bk)
+            mask = mask & cm[None, :, None, None, :]
+        if window is not None:
+            wm = pj[None, :] > (q_positions[:, None] - window)
+            mask = mask & wm[None, :, None, None, :]
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bqkgj,bjkd->bqkgd", p.astype(vj.dtype), vj,
+                        preferred_element_type=F32)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, KV, G), NEG_INF, F32)
+    l0 = jnp.zeros((B, Sq, KV, G), F32)
+    a0 = jnp.zeros((B, Sq, KV, G, dv), F32)
+    # remat each KV step: backward recomputes scores (flash-style), so the
+    # live set stays O(Sq x block_kv) instead of O(Sq x Skv).
+    (m, l, acc), _ = lax.scan(jax.checkpoint(step), (m0, l0, a0),
+                              (kb, vb, pb, vmask))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, Sq, H, dv).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, k_new, v_new, *, kv_len: int,
+                     window: int | None = None, scale: float | None = None,
+                     cache_positions=None):
+    """Single-token attention against a (possibly seq-sharded) cache.
+
+    q: (B, 1, H, dk); caches: (B, S, KV, d*); k_new/v_new: (B, 1, KV, d*).
+    The new token's KV is attended separately (no in-graph cache mutation
+    needed for the dry-run path; the serving loop owns cache writes).
+    Softmax max/sum over the sharded S axis lower to all-reduces under SPMD.
+    ``cache_positions``: absolute token position of each cache slot (for
+    rolled sliding-window caches); defaults to arange(S).
+    """
+    B, _, H, dk = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    dv = v_cache.shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(dk)
+    qg = q.reshape(B, KV, G, dk)
+
+    s_c = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                     preferred_element_type=F32) * scale
+    S = k_cache.shape[1]
+    pos = jnp.arange(S) if cache_positions is None else cache_positions
+    mask = (pos < kv_len) & (pos >= 0)
+    if window is not None:
+        mask = mask & (pos > kv_len - window)
+    s_c = jnp.where(mask[None, None, None, :], s_c, NEG_INF)
+    s_n = jnp.einsum("bkgd,bjkd->bkgj", qg, k_new,
+                     preferred_element_type=F32) * scale   # (B,KV,G,1)
+
+    m = jnp.maximum(jnp.max(s_c, axis=-1), s_n[..., 0])
+    p_c = jnp.exp(s_c - m[..., None])
+    p_n = jnp.exp(s_n - m[..., None])
+    l = jnp.sum(p_c, axis=-1) + p_n[..., 0]
+    ctx = jnp.einsum("bkgs,bskd->bkgd", p_c.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=F32)
+    ctx = ctx + p_n * v_new.reshape(B, KV, 1, dv).astype(F32)
+    out = ctx / l[..., None]
+    return out.reshape(B, 1, H, dv).astype(q.dtype)
+
+
+# --------------------------------------------------------- GQA attention ---
+
+def attn_defs(cfg: ModelConfig):
+    D, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    d = {
+        "wq": ParamDef((D, H, hd), ("fsdp", "tp", "tp2"), init="scaled", fan_in=D),
+        "wk": ParamDef((D, KV, hd), ("fsdp", "tp", "tp2"), init="scaled", fan_in=D),
+        "wv": ParamDef((D, KV, hd), ("fsdp", "tp", "tp2"), init="scaled", fan_in=D),
+        "wo": ParamDef((H, hd, D), ("tp", "tp2", "fsdp"), init="scaled", fan_in=H * hd),
+    }
+    if cfg.qkv_bias:
+        d["bq"] = ParamDef((H, hd), ("tp", None), init="zeros")
+        d["bk"] = ParamDef((KV, hd), ("tp", None), init="zeros")
+        d["bv"] = ParamDef((KV, hd), ("tp", None), init="zeros")
+    return d
+
+
+def cross_attn_defs(cfg: ModelConfig):
+    return attn_defs(cfg)
+
+
+def _qkv(cfg, p, x, x_kv=None):
+    x_kv = x if x_kv is None else x_kv
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"], preferred_element_type=F32)
+    k = jnp.einsum("bsd,dhk->bshk", x_kv, p["wk"], preferred_element_type=F32)
+    v = jnp.einsum("bsd,dhk->bshk", x_kv, p["wv"], preferred_element_type=F32)
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return q.astype(x.dtype), k.astype(x.dtype), v.astype(x.dtype)
+
+
+def self_attention(cfg: ModelConfig, p, x, positions, *, window=None,
+                   block_kv: int = 512, shardings=None):
+    """Full-sequence causal self-attention (train / prefill).
+    Returns (out, (k, v)) — caller decides whether to keep the cache.
+    An "attn_qkv" sharding (batch over every mesh axis) switches the region
+    to pure DP when head counts don't divide the tensor axis
+    (REPRO_ATTN_DP=0 disables, for perf A/B)."""
+    import os
+    spec = None
+    if shardings and os.environ.get("REPRO_ATTN_DP") != "0":
+        spec = shardings.get("attn_qkv")
+    q, k, v = _qkv(cfg, p, x)
+    if spec is not None:
+        q = lax.with_sharding_constraint(q, spec)
+        k = lax.with_sharding_constraint(k, spec)
+        v = lax.with_sharding_constraint(v, spec)
+    cos, sin = rope_cos_sin(positions, cfg.head_dim, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    kvpos = positions if positions.ndim == 1 else positions[0]
+    qpos = kvpos
+    out = blockwise_attention(q, k, v, causal=True, window=window,
+                              q_positions=qpos, kv_positions=kvpos,
+                              block_kv=block_kv)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"], preferred_element_type=F32)
+    return out.astype(x.dtype), (k, v)
+
+
+def self_attention_decode(cfg: ModelConfig, p, x, pos, cache, *, window=None):
+    """x: (B, 1, D); pos: scalar int (current position); cache: {'k','v'}.
+    A windowed cache holds the last S tokens in time order (rolled), so its
+    slot i corresponds to absolute position pos - S + i.
+    Returns (out, (k_new, v_new)) — new KV for position `pos`."""
+    q, k_new, v_new = _qkv(cfg, p, x)
+    posv = jnp.asarray([pos]) if jnp.ndim(pos) == 0 else pos[None]
+    cos, sin = rope_cos_sin(posv.reshape(1), cfg.head_dim, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k_new = apply_rope(k_new, cos, sin)
+    S = cache["k"].shape[1]
+    cache_positions = None
+    if window is not None and S <= window:
+        cache_positions = pos - S + jnp.arange(S)
+    out = decode_attention(q, cache["k"], cache["v"], k_new, v_new,
+                           kv_len=pos, window=window,
+                           cache_positions=cache_positions)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"], preferred_element_type=F32)
+    return out.astype(x.dtype), (k_new, v_new)
+
+
+def cross_attention(cfg: ModelConfig, p, x, kv_cache):
+    """Cross-attention to precomputed encoder/image K,V: (B, Senc, KV, hd)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"],
+                   preferred_element_type=F32).astype(x.dtype)
+    out = blockwise_attention(q, kv_cache["k"], kv_cache["v"], causal=False)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"], preferred_element_type=F32)
+    return out.astype(x.dtype)
+
+
+def cross_kv(cfg: ModelConfig, p, x_enc):
+    k = jnp.einsum("bsd,dhk->bshk", x_enc, p["wk"], preferred_element_type=F32)
+    v = jnp.einsum("bsd,dhk->bshk", x_enc, p["wv"], preferred_element_type=F32)
+    return {"k": k.astype(x_enc.dtype), "v": v.astype(x_enc.dtype)}
+
+
+# ------------------------------------------------------------------ MLA ----
+
+def mla_defs(cfg: ModelConfig):
+    D, H = cfg.d_model, cfg.num_heads
+    nope, rope_d, dv, R = cfg.head_dim, cfg.rope_head_dim, cfg.v_hd, cfg.kv_lora_rank
+    return {
+        "wq": ParamDef((D, H, nope + rope_d), ("fsdp", "tp", None), init="scaled", fan_in=D),
+        "w_dkv": ParamDef((D, R), ("fsdp", None), init="scaled", fan_in=D),
+        "w_kr": ParamDef((D, rope_d), ("fsdp", None), init="scaled", fan_in=D),
+        "w_uk": ParamDef((H, R, nope), ("tp", None, None), init="scaled", fan_in=R),
+        "w_uv": ParamDef((H, R, dv), ("tp", None, None), init="scaled", fan_in=R),
+        "wo": ParamDef((H, dv, D), ("tp", None, "fsdp"), init="scaled", fan_in=H * dv),
+        "kv_norm": ParamDef((R,), (None,), init="ones"),
+    }
+
+
+def _mla_q(cfg, p, x, positions):
+    nope, rope_d = cfg.head_dim, cfg.rope_head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"],
+                   preferred_element_type=F32).astype(x.dtype)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    cos, sin = rope_cos_sin(positions, rope_d, cfg.rope_theta)
+    return q_nope, apply_rope(q_rope, cos, sin)
+
+
+def _mla_ckv(cfg, p, x, positions):
+    ckv = rmsnorm(jnp.einsum("bsd,dr->bsr", x, p["w_dkv"],
+                             preferred_element_type=F32).astype(x.dtype),
+                  p["kv_norm"])
+    kr = jnp.einsum("bsd,dk->bsk", x, p["w_kr"],
+                    preferred_element_type=F32).astype(x.dtype)
+    cos, sin = rope_cos_sin(positions, cfg.rope_head_dim, cfg.rope_theta)
+    kr = apply_rope(kr[:, :, None, :], cos, sin)[:, :, 0, :]
+    return ckv, kr
+
+
+def mla_attention(cfg: ModelConfig, p, x, positions, *, block_kv=512):
+    """Train/prefill MLA: expand per-head K/V from latents, combined-head
+    blockwise attention. Returns (out, (ckv, k_rope)) cache."""
+    nope, rope_d, dv = cfg.head_dim, cfg.rope_head_dim, cfg.v_hd
+    q_nope, q_rope = _mla_q(cfg, p, x, positions)
+    ckv, kr = _mla_ckv(cfg, p, x, positions)
+    k_nope = jnp.einsum("bsr,hrk->bshk", ckv, p["w_uk"],
+                        preferred_element_type=F32).astype(x.dtype)
+    v = jnp.einsum("bsr,hrk->bshk", ckv, p["w_uv"],
+                   preferred_element_type=F32).astype(x.dtype)
+    H = cfg.num_heads
+    k_rope_b = jnp.broadcast_to(kr[:, :, None, :], kr.shape[:2] + (H, rope_d))
+    qc = jnp.concatenate([q_nope, q_rope], -1)
+    kc = jnp.concatenate([k_nope, k_rope_b], -1)
+    kvpos = positions if positions.ndim == 1 else positions[0]
+    out = blockwise_attention(qc, kc, v, causal=True, q_positions=kvpos,
+                              kv_positions=kvpos, block_kv=block_kv,
+                              scale=1.0 / math.sqrt(nope + rope_d))
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"], preferred_element_type=F32)
+    return out.astype(x.dtype), (ckv, kr)
+
+
+def mla_attention_decode(cfg: ModelConfig, p, x, pos, cache):
+    """Absorbed-form MLA decode: score/value directly in the latent space.
+    cache: {'ckv': (B, S, R), 'kr': (B, S, rope_d)} (S may be sharded)."""
+    nope, rope_d, dv = cfg.head_dim, cfg.rope_head_dim, cfg.v_hd
+    B = x.shape[0]
+    posv = jnp.asarray([pos]).reshape(1)
+    q_nope, q_rope = _mla_q(cfg, p, x, posv)
+    ckv_new, kr_new = _mla_ckv(cfg, p, x, posv)
+    # absorb W_uk into q: (B,1,H,nope) @ (H,R,nope) -> (B,H,R)
+    q_lat = jnp.einsum("bshk,hrk->bhr", q_nope, p["w_uk"],
+                       preferred_element_type=F32)
+    scale = 1.0 / math.sqrt(nope + rope_d)
+    s_c = (jnp.einsum("bhr,bsr->bhs", q_lat, cache["ckv"].astype(F32))
+           + jnp.einsum("bshk,bSk->bhS", q_rope.astype(F32),
+                        cache["kr"].astype(F32))) * scale
+    S = cache["ckv"].shape[1]
+    mask = jnp.arange(S) < pos
+    s_c = jnp.where(mask[None, None, :], s_c, NEG_INF)
+    s_n = (jnp.einsum("bhr,bsr->bh", q_lat, ckv_new.astype(F32))
+           + jnp.einsum("bshk,bsk->bh", q_rope.astype(F32),
+                        kr_new.astype(F32))) * scale
+    m = jnp.maximum(jnp.max(s_c, -1), s_n)
+    p_c = jnp.exp(s_c - m[..., None])
+    p_n = jnp.exp(s_n - m)
+    l = p_c.sum(-1) + p_n
+    ctx = jnp.einsum("bhs,bsr->bhr", p_c, cache["ckv"].astype(F32))
+    ctx = (ctx + p_n[..., None] * ckv_new[:, 0, None, :].astype(F32)) / l[..., None]
+    v = jnp.einsum("bhr,hrk->bhk", ctx, p["w_uv"].astype(F32))
+    out = jnp.einsum("bhk,hkd->bd", v, p["wo"].astype(F32))
+    return out[:, None, :].astype(x.dtype), (ckv_new, kr_new)
+
+
+# ------------------------------------------------------------------ MLP ----
+
+def mlp_defs(cfg: ModelConfig, d_ff: int | None = None):
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.act == "swiglu":
+        return {"wg": ParamDef((D, F), ("fsdp", "tp"), init="scaled", fan_in=D),
+                "wu": ParamDef((D, F), ("fsdp", "tp"), init="scaled", fan_in=D),
+                "wd": ParamDef((F, D), ("tp", "fsdp"), init="scaled", fan_in=F)}
+    return {"w1": ParamDef((D, F), ("fsdp", "tp"), init="scaled", fan_in=D),
+            "b1": ParamDef((F,), ("tp",), init="zeros"),
+            "w2": ParamDef((F, D), ("tp", "fsdp"), init="scaled", fan_in=F),
+            "b2": ParamDef((D,), (None,), init="zeros")}
+
+
+def mlp(cfg: ModelConfig, p, x):
+    if cfg.act == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"], preferred_element_type=F32)
+        u = jnp.einsum("bsd,df->bsf", x, p["wu"], preferred_element_type=F32)
+        h = (jax.nn.silu(g) * u).astype(x.dtype)
+        return jnp.einsum("bsf,fd->bsd", h, p["wd"],
+                          preferred_element_type=F32).astype(x.dtype)
+    h = jnp.einsum("bsd,df->bsf", x, p["w1"], preferred_element_type=F32) + p["b1"]
+    h = jax.nn.gelu(h).astype(x.dtype)
+    return (jnp.einsum("bsf,fd->bsd", h, p["w2"],
+                       preferred_element_type=F32) + p["b2"]).astype(x.dtype)
+
+
+# ------------------------------------------------------------------ MoE ----
+
+def moe_defs(cfg: ModelConfig):
+    D, E, F = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    d = {
+        "router": ParamDef((D, E), (None, None), init="scaled", fan_in=D,
+                           dtype=jnp.float32),
+        "wg": ParamDef((E, D, F), ("ep", "fsdp", "tp"), init="scaled", fan_in=D),
+        "wu": ParamDef((E, D, F), ("ep", "fsdp", "tp"), init="scaled", fan_in=D),
+        "wd": ParamDef((E, F, D), ("ep", "tp", "fsdp"), init="scaled", fan_in=F),
+    }
+    if cfg.num_shared_experts:
+        Fs = F * cfg.num_shared_experts
+        d["shared"] = mlp_defs(cfg, d_ff=Fs)
+    return d
+
+
+def moe(cfg: ModelConfig, p, x, *, return_aux: bool = False,
+        dispatch_spec=None):
+    """Top-k MoE with sort-based capacity dispatch (drop-on-overflow).
+
+    x: (B, S, D). Tokens are flattened, routed to top-k experts, packed into
+    an (E, C, D) buffer by expert (C = capacity), processed by batched expert
+    matmuls, and combined with router weights. Overflowing tokens fall back
+    to zero contribution from that expert (standard capacity dropping).
+    """
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    T = B * S
+    xt = x.reshape(T, D)
+
+    logits = (xt.astype(F32) @ p["router"]).astype(F32)        # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = lax.top_k(probs, K)                               # (T, K)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+
+    C = int(math.ceil(T * K * cfg.capacity_factor / E))
+    C = max(C, 1)
+
+    flat_e = idx.reshape(-1)                                   # (T*K,)
+    # position of each (token, k) within its expert, by stable sort
+    order = jnp.argsort(flat_e, stable=True)                   # (T*K,)
+    ranks = jnp.zeros((T * K,), jnp.int32).at[order].set(
+        jnp.arange(T * K, dtype=jnp.int32))
+    # rank within expert = rank - (# entries routed to smaller experts)
+    counts = jnp.bincount(flat_e, length=E)
+    offsets = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                               jnp.cumsum(counts)[:-1].astype(jnp.int32)])
+    pos_in_e = ranks - offsets[flat_e]
+    keep = pos_in_e < C
+    slot = jnp.where(keep, flat_e * C + pos_in_e, E * C)       # drop -> OOB
+
+    buf = jnp.zeros((E * C + 1, D), xt.dtype)
+    tok_ids = jnp.repeat(jnp.arange(T, dtype=jnp.int32), K)
+    buf = buf.at[slot].set(xt[tok_ids], mode="drop")
+    xe = buf[:E * C].reshape(E, C, D)
+    import os
+    if os.environ.get("REPRO_MOE_EP") == "0":
+        dispatch_spec = None   # perf A/B switch (EXPERIMENTS §Perf)
+    if dispatch_spec is not None:
+        # expert-parallel constraint: without it GSPMD replicates the
+        # dispatch buffer and every device computes ALL experts (measured
+        # 14x useful-flops waste on deepseek-v2 before this constraint)
+        xe = lax.with_sharding_constraint(xe, dispatch_spec)
+
+    g = jnp.einsum("ecd,edf->ecf", xe, p["wg"], preferred_element_type=F32)
+    u = jnp.einsum("ecd,edf->ecf", xe, p["wu"], preferred_element_type=F32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    ye = jnp.einsum("ecf,efd->ecd", h, p["wd"],
+                    preferred_element_type=F32)                # (E, C, D) f32
+    if dispatch_spec is not None:
+        ye = lax.with_sharding_constraint(ye, dispatch_spec)
+
+    flat_y = ye.reshape(E * C, D)
+    gathered = jnp.where(keep[:, None], flat_y[jnp.minimum(slot, E * C - 1)], 0.0)
+    contrib = gathered * w.reshape(-1)[:, None]
+    out = jnp.zeros((T, D), F32).at[tok_ids].add(contrib)
+
+    if cfg.num_shared_experts:
+        out = out + mlp(cfg, p["shared"], x).reshape(T, D).astype(F32)
+
+    out = out.reshape(B, S, D).astype(x.dtype)
+    if return_aux:
+        # load-balancing aux loss (Switch-style)
+        me = probs.mean(0)
+        ce = jnp.bincount(flat_e, length=E).astype(F32) / (T * K)
+        aux = E * jnp.sum(me * ce)
+        return out, aux
+    return out

@@ -1,0 +1,403 @@
+"""Model assembly: composable decoder / encoder-decoder stacks over the layer
+zoo, with scanned super-blocks (homogeneous HLO), remat, and functional
+caches for decode.
+
+Entrypoints
+-----------
+- ``model_defs(cfg)``        -> ParamDef pytree (single source of truth)
+- ``forward_train(...)``     -> logits over the full sequence
+- ``forward_prefill(...)``   -> (last-token logits, caches)
+- ``forward_decode(...)``    -> (logits, new cache deltas) for one token
+- ``loss_fn(...)``           -> scalar LM loss (+ MoE aux)
+- ``cache_shapes(cfg, ...)`` -> pytree of cache array shapes for decode
+- ``count_model_params(cfg)``/``active_params(cfg)`` -> roofline N
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.params import ParamDef, stack_defs, count_params, is_def
+
+F32 = jnp.float32
+
+
+def cst(x, shardings, key):
+    """with_sharding_constraint if a spec for `key` was provided."""
+    if shardings and key in shardings and shardings[key] is not None:
+        return lax.with_sharding_constraint(x, shardings[key])
+    return x
+
+
+# ------------------------------------------------------------- defs tree ---
+
+def layer_defs(cfg: ModelConfig, l: int):
+    kind = cfg.layer_kind(l)
+    d: dict[str, Any] = {"norm1": L.norm_defs(cfg)}
+    if kind == "attn":
+        d["mixer"] = L.mla_defs(cfg) if cfg.use_mla else L.attn_defs(cfg)
+    elif kind == "ssm":
+        d["mixer"] = S.ssm_defs(cfg)
+    elif kind == "cross":
+        d["mixer"] = L.cross_attn_defs(cfg)
+    if cfg.is_encoder_decoder:
+        d["norm_x"] = L.norm_defs(cfg)
+        d["xattn"] = L.cross_attn_defs(cfg)
+    if cfg.d_ff > 0 or cfg.is_moe_layer(l):
+        d["norm2"] = L.norm_defs(cfg)
+        d["ffn"] = L.moe_defs(cfg) if cfg.is_moe_layer(l) else L.mlp_defs(cfg)
+    return d
+
+
+def encoder_layer_defs(cfg: ModelConfig):
+    return {"norm1": L.norm_defs(cfg), "mixer": L.attn_defs(cfg),
+            "norm2": L.norm_defs(cfg), "ffn": L.mlp_defs(cfg)}
+
+
+def model_defs(cfg: ModelConfig):
+    Vp, D = cfg.padded_vocab(), cfg.d_model
+    defs: dict[str, Any] = {
+        "embed": ParamDef((Vp, D), ("tp", "fsdp"), init="normal"),
+        "final_norm": L.norm_defs(cfg),
+    }
+    if not cfg.tie_embeddings:
+        defs["unembed"] = ParamDef((D, Vp), ("fsdp", "tp"),
+                                   init="scaled", fan_in=D)
+    npfx = cfg.first_dense_layers
+    if npfx:
+        defs["prefix"] = {f"p{i}": layer_defs(cfg, i) for i in range(npfx)}
+    nscan = cfg.num_layers - npfx
+    assert nscan % cfg.block_period == 0
+    nb = nscan // cfg.block_period
+    block = {f"s{i}": layer_defs(cfg, npfx + i) for i in range(cfg.block_period)}
+    defs["blocks"] = stack_defs(block, nb)
+    if cfg.is_encoder_decoder:
+        defs["encoder"] = {
+            "blocks": stack_defs(encoder_layer_defs(cfg), cfg.encoder_layers),
+            "final_norm": L.norm_defs(cfg),
+        }
+    return defs
+
+
+def n_scan_blocks(cfg: ModelConfig) -> int:
+    return (cfg.num_layers - cfg.first_dense_layers) // cfg.block_period
+
+
+# --------------------------------------------------------- layer forward ---
+
+def _ffn(cfg, lp, x, moe_layer: bool, aux, shardings=None):
+    h = L.apply_norm(cfg, lp["norm2"], x)
+    if moe_layer:
+        spec = shardings.get("moe_dispatch") if shardings else None
+        y, a = L.moe(cfg, lp["ffn"], h, return_aux=True, dispatch_spec=spec)
+        return x + y, aux + a
+    return x + L.mlp(cfg, lp["ffn"], h), aux
+
+
+def layer_forward(cfg: ModelConfig, lp, x, l: int, *, positions, mode: str,
+                  cache=None, enc_out=None, img_embeds=None, shardings=None):
+    """One layer, full-sequence (train/prefill). Returns (x, new_cache, aux)."""
+    kind = cfg.layer_kind(l)
+    aux = jnp.zeros((), F32)
+    h = L.apply_norm(cfg, lp["norm1"], x)
+    new_cache = {}
+    if kind == "attn":
+        if cfg.use_mla:
+            y, (ckv, kr) = L.mla_attention(cfg, lp["mixer"], h, positions)
+            new_cache = {"ckv": ckv, "kr": kr}
+        else:
+            y, (k, v) = L.self_attention(cfg, lp["mixer"], h, positions,
+                                         window=cfg.sliding_window,
+                                         shardings=shardings)
+            if mode == "prefill":
+                if cfg.sliding_window:   # ring cache: keep last `window`
+                    w = min(cfg.sliding_window, k.shape[1])
+                    k, v = k[:, -w:], v[:, -w:]
+                new_cache = {"k": cst(k, shardings, "kv_cache"),
+                             "v": cst(v, shardings, "kv_cache")}
+    elif kind == "ssm":
+        y, (final_state, conv_tail) = S.mamba_block(cfg, lp["mixer"], h)
+        if mode == "prefill":
+            new_cache = {"state": final_state.astype(x.dtype),
+                         "conv": conv_tail.astype(x.dtype)}
+    elif kind == "cross":
+        kv = L.cross_kv(cfg, lp["mixer"], img_embeds)
+        y = L.cross_attention(cfg, lp["mixer"], h, kv)
+        if mode == "prefill":
+            new_cache = {"k": kv["k"], "v": kv["v"]}
+    x = x + y
+    if cfg.is_encoder_decoder:
+        hx = L.apply_norm(cfg, lp["norm_x"], x)
+        kv = L.cross_kv(cfg, lp["xattn"], enc_out)
+        x = x + L.cross_attention(cfg, lp["xattn"], hx, kv)
+        if mode == "prefill":
+            new_cache["xk"], new_cache["xv"] = kv["k"], kv["v"]
+    if "ffn" in lp:
+        x, aux = _ffn(cfg, lp, x, cfg.is_moe_layer(l), aux, shardings)
+    x = cst(x, shardings, "residual")
+    return x, new_cache, aux
+
+
+def layer_decode(cfg: ModelConfig, lp, x, l: int, *, pos, cache,
+                 shardings=None):
+    """One layer, one token. Returns (x, cache_delta)."""
+    kind = cfg.layer_kind(l)
+    h = L.apply_norm(cfg, lp["norm1"], x)
+    delta = {}
+    if kind == "attn":
+        if cfg.use_mla:
+            y, (ckv, kr) = L.mla_attention_decode(cfg, lp["mixer"], h, pos,
+                                                  cache)
+            delta = {"ckv": ckv, "kr": kr}
+        else:
+            y, (kn, vn) = L.self_attention_decode(
+                cfg, lp["mixer"], h, pos, cache, window=cfg.sliding_window)
+            delta = {"k": kn, "v": vn}
+    elif kind == "ssm":
+        y, new_cache = S.mamba_block_decode(cfg, lp["mixer"], h, cache)
+        delta = new_cache
+    elif kind == "cross":
+        y = L.cross_attention(cfg, lp["mixer"], h,
+                              {"k": cache["k"], "v": cache["v"]})
+    x = x + y
+    if cfg.is_encoder_decoder:
+        hx = L.apply_norm(cfg, lp["norm_x"], x)
+        x = x + L.cross_attention(cfg, lp["xattn"], hx,
+                                  {"k": cache["xk"], "v": cache["xv"]})
+    if "ffn" in lp:
+        x, _ = _ffn(cfg, lp, x, cfg.is_moe_layer(l), jnp.zeros((), F32),
+                    shardings)
+    return x, delta
+
+
+# ----------------------------------------------------------- full stacks ---
+
+def _embed(cfg, params, tokens, shardings):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    return cst(x, shardings, "residual")
+
+
+def _logits(cfg, params, x, shardings=None):
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w, preferred_element_type=F32)
+    logits = cst(logits, shardings, "logits")
+    # mask padded vocab entries
+    Vp = cfg.padded_vocab()
+    if Vp != cfg.vocab_size:
+        mask = jnp.arange(Vp) < cfg.vocab_size
+        logits = jnp.where(mask, logits, -1e9)
+    return logits
+
+
+def _encoder_forward(cfg, params, enc_embeds, shardings):
+    ep = params["encoder"]
+    pos = jnp.arange(enc_embeds.shape[1])
+
+    def body(x, bp):
+        h = L.apply_norm(cfg, bp["norm1"], x)
+        q, k, v = L._qkv(cfg, bp["mixer"], h)
+        cos, sin = L.rope_cos_sin(pos, cfg.head_dim, cfg.rope_theta)
+        q, k = L.apply_rope(q, cos, sin), L.apply_rope(k, cos, sin)
+        y = L.blockwise_attention(q, k, v, causal=False)
+        y = jnp.einsum("bshk,hkd->bsd", y, bp["mixer"]["wo"],
+                       preferred_element_type=F32).astype(x.dtype)
+        x = x + y
+        h2 = L.apply_norm(cfg, bp["norm2"], x)
+        x = x + L.mlp(cfg, bp["ffn"], h2)
+        return cst(x, shardings, "residual"), None
+
+    x, _ = lax.scan(body, enc_embeds, ep["blocks"])
+    return L.apply_norm(cfg, ep["final_norm"], x)
+
+
+def forward_train(cfg: ModelConfig, params, tokens, *, enc_embeds=None,
+                  img_embeds=None, shardings=None, remat: bool = True,
+                  unroll: bool = False):
+    """tokens: (B, S) -> logits (B, S, Vp). Also returns MoE aux loss."""
+    positions = jnp.arange(tokens.shape[1])
+    x = _embed(cfg, params, tokens, shardings)
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = _encoder_forward(cfg, params, enc_embeds, shardings)
+
+    aux_total = jnp.zeros((), F32)
+    for i in range(cfg.first_dense_layers):
+        x, _, a = layer_forward(cfg, params["prefix"][f"p{i}"], x, i,
+                                positions=positions, mode="train",
+                                enc_out=enc_out, img_embeds=img_embeds,
+                                shardings=shardings)
+        aux_total += a
+
+    npfx = cfg.first_dense_layers
+
+    def block_fn(carry, bp):
+        x, aux = carry
+        for i in range(cfg.block_period):
+            x, _, a = layer_forward(cfg, bp[f"s{i}"], x, npfx + i,
+                                    positions=positions, mode="train",
+                                    enc_out=enc_out, img_embeds=img_embeds,
+                                    shardings=shardings)
+            aux = aux + a
+        return (x, aux), None
+
+    fn = jax.checkpoint(block_fn) if remat else block_fn
+    # unroll=True removes the while loop so compiled.cost_analysis() counts
+    # every layer (XLA cost analysis counts a loop body once) — used by the
+    # dry-run's measurement mode.
+    (x, aux_total), _ = lax.scan(fn, (x, aux_total), params["blocks"],
+                                 unroll=True if unroll else 1)
+    return _logits(cfg, params, x, shardings), aux_total
+
+
+def forward_prefill(cfg: ModelConfig, params, tokens, *, enc_embeds=None,
+                    img_embeds=None, shardings=None, unroll: bool = False):
+    """tokens: (B, S) -> (logits for last position (B, Vp), caches pytree).
+
+    Cache leaves are stacked over scan blocks: (nb, B, ...)."""
+    positions = jnp.arange(tokens.shape[1])
+    x = _embed(cfg, params, tokens, shardings)
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = _encoder_forward(cfg, params, enc_embeds, shardings)
+
+    prefix_caches = {}
+    for i in range(cfg.first_dense_layers):
+        x, c, _ = layer_forward(cfg, params["prefix"][f"p{i}"], x, i,
+                                positions=positions, mode="prefill",
+                                enc_out=enc_out, img_embeds=img_embeds,
+                                shardings=shardings)
+        prefix_caches[f"p{i}"] = c
+    npfx = cfg.first_dense_layers
+
+    def block_fn(x, bp):
+        caches = {}
+        for i in range(cfg.block_period):
+            x, c, _ = layer_forward(cfg, bp[f"s{i}"], x, npfx + i,
+                                    positions=positions, mode="prefill",
+                                    enc_out=enc_out, img_embeds=img_embeds,
+                                    shardings=shardings)
+            caches[f"s{i}"] = c
+        return x, caches
+
+    x, block_caches = lax.scan(block_fn, x, params["blocks"],
+                               unroll=True if unroll else 1)
+    logits = _logits(cfg, params, x[:, -1:, :], shardings)[:, 0]
+    return logits, {"prefix": prefix_caches, "blocks": block_caches}
+
+
+def forward_decode(cfg: ModelConfig, params, token, pos, caches, *,
+                   shardings=None, unroll: bool = False):
+    """token: (B, 1) int32; pos: int (static or traced); caches from
+    ``cache_shapes``. Returns (logits (B, Vp), cache deltas)."""
+    x = _embed(cfg, params, token, shardings)
+    npfx = cfg.first_dense_layers
+    prefix_deltas = {}
+    for i in range(npfx):
+        x, d = layer_decode(cfg, params["prefix"][f"p{i}"], x, i, pos=pos,
+                            cache=caches["prefix"][f"p{i}"],
+                            shardings=shardings)
+        prefix_deltas[f"p{i}"] = d
+
+    def block_fn(x, inp):
+        bp, bc = inp
+        deltas = {}
+        for i in range(cfg.block_period):
+            x, d = layer_decode(cfg, bp[f"s{i}"], x, npfx + i, pos=pos,
+                                cache=bc[f"s{i}"], shardings=shardings)
+            deltas[f"s{i}"] = d
+        return x, deltas
+
+    x, block_deltas = lax.scan(block_fn, x, (params["blocks"],
+                                             caches["blocks"]),
+                               unroll=True if unroll else 1)
+    logits = _logits(cfg, params, x, shardings)[:, 0]
+    return logits, {"prefix": prefix_deltas, "blocks": block_deltas}
+
+
+# ----------------------------------------------------------------- loss ----
+
+def loss_fn(cfg: ModelConfig, params, batch, *, shardings=None,
+            remat: bool = True, aux_weight: float = 0.01,
+            z_weight: float = 1e-4, unroll: bool = False):
+    logits, aux = forward_train(
+        cfg, params, batch["tokens"],
+        enc_embeds=batch.get("enc_embeds"), img_embeds=batch.get("img_embeds"),
+        shardings=shardings, remat=remat, unroll=unroll)
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    mask = (labels >= 0).astype(F32)
+    labels = jnp.maximum(labels, 0)
+    # one-hot masked sum instead of gather: partitions cleanly over a
+    # vocab-sharded logits tensor (partial sums -> all-reduce)
+    Vp = logits.shape[-1]
+    onehot = (jnp.arange(Vp)[None, None, :] == labels[..., None])
+    ll = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    nll = jnp.sum((lse - ll) * mask) / jnp.maximum(mask.sum(), 1.0)
+    zloss = jnp.sum((lse ** 2) * mask) / jnp.maximum(mask.sum(), 1.0)
+    loss = nll + z_weight * zloss + aux_weight * aux
+    return loss, {"nll": nll, "aux": aux, "zloss": zloss}
+
+
+# ----------------------------------------------------------- cache decls ---
+
+def _layer_cache_shape(cfg: ModelConfig, l: int, batch: int, seq: int):
+    kind = cfg.layer_kind(l)
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    c: dict[str, tuple] = {}
+    if kind == "attn":
+        if cfg.use_mla:
+            c = {"ckv": (batch, seq, cfg.kv_lora_rank),
+                 "kr": (batch, seq, cfg.rope_head_dim)}
+        else:
+            s = min(seq, cfg.sliding_window) if cfg.sliding_window else seq
+            c = {"k": (batch, s, KV, hd), "v": (batch, s, KV, hd)}
+    elif kind == "ssm":
+        c = S.ssm_cache_shape(cfg, batch)
+    elif kind == "cross":
+        c = {"k": (batch, cfg.num_image_tokens, KV, hd),
+             "v": (batch, cfg.num_image_tokens, KV, hd)}
+    if cfg.is_encoder_decoder:
+        c["xk"] = (batch, cfg.encoder_seq, KV, hd)
+        c["xv"] = (batch, cfg.encoder_seq, KV, hd)
+    return c
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, seq: int):
+    """Pytree of shapes matching forward_decode's `caches` argument."""
+    nb = n_scan_blocks(cfg)
+    out: dict[str, Any] = {"prefix": {}, "blocks": {}}
+    for i in range(cfg.first_dense_layers):
+        out["prefix"][f"p{i}"] = _layer_cache_shape(cfg, i, batch, seq)
+    for i in range(cfg.block_period):
+        l = cfg.first_dense_layers + i
+        per = _layer_cache_shape(cfg, l, batch, seq)
+        out["blocks"][f"s{i}"] = {k: (nb,) + v for k, v in per.items()}
+    return out
+
+
+# -------------------------------------------------------------- counting ---
+
+def count_model_params(cfg: ModelConfig) -> int:
+    return count_params(model_defs(cfg))
+
+
+def active_params(cfg: ModelConfig) -> int:
+    """Parameters touched per token (MoE: only top-k experts active)."""
+    total = count_model_params(cfg)
+    if not cfg.num_experts:
+        return total
+    E, K = cfg.num_experts, cfg.experts_per_token
+    per_expert = 3 * cfg.d_model * cfg.moe_d_ff
+    n_moe_layers = sum(cfg.is_moe_layer(l) for l in range(cfg.num_layers))
+    inactive = n_moe_layers * per_expert * (E - K)
+    return total - inactive

@@ -1,0 +1,112 @@
+"""Parameter definitions: one source of truth for shape, init, and sharding.
+
+A model is described as a pytree (nested dicts) of ``ParamDef`` leaves. From
+that single tree we derive: materialized parameters (``init_params``), the
+matching ``PartitionSpec`` tree (``param_specs``), ``ShapeDtypeStruct`` stand-ins
+for dry-runs (``param_shapes``), and parameter counts (``count_params``).
+
+Sharding axes are *logical* names resolved against the physical mesh at spec
+build time. A dimension is sharded only when divisible by the product of the
+mapped mesh axes; otherwise it silently falls back to replication for that
+dimension (small models on big meshes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    # Logical axis per dim: None (replicated) or a logical name ("tp", "fsdp",
+    # "ep", "stack", ...). Resolved to mesh axes via the rules dict.
+    axes: tuple[str | None, ...]
+    init: str = "normal"        # normal | zeros | ones | scaled
+    scale: float = 1.0          # stddev multiplier (for normal/scaled)
+    fan_in: int | None = None   # for "scaled": stddev = scale / sqrt(fan_in)
+    dtype: Any = jnp.bfloat16
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def tree_map_defs(fn: Callable[[ParamDef], Any], tree: Pytree) -> Pytree:
+    return jax.tree.map(fn, tree, is_leaf=is_def)
+
+
+def stack_defs(tree: Pytree, n: int) -> Pytree:
+    """Add a leading stacked-layer dimension to every def in the tree."""
+    def add(d: ParamDef) -> ParamDef:
+        return dataclasses.replace(d, shape=(n,) + d.shape, axes=("stack",) + d.axes)
+    return tree_map_defs(add, tree)
+
+
+def _resolve_axis(logical: str | None, dim: int, rules: dict[str, tuple[str, ...]],
+                  mesh_sizes: dict[str, int]):
+    """Map a logical axis to mesh axes, dropping it if not divisible."""
+    if logical is None:
+        return None
+    mesh_axes = rules.get(logical, ())
+    if not mesh_axes:
+        return None
+    size = math.prod(mesh_sizes[a] for a in mesh_axes)
+    if size <= 1 or dim % size != 0:
+        return None
+    return mesh_axes if len(mesh_axes) > 1 else mesh_axes[0]
+
+
+def param_specs(tree: Pytree, rules: dict[str, tuple[str, ...]],
+                mesh_sizes: dict[str, int]) -> Pytree:
+    def spec(d: ParamDef) -> P:
+        used: set[str] = set()
+        out = []
+        for a, s in zip(d.axes, d.shape):
+            r = _resolve_axis(a, s, rules, mesh_sizes)
+            names = (r,) if isinstance(r, str) else (r or ())
+            if r is None or any(n in used for n in names):
+                out.append(None)  # a mesh axis may appear at most once per spec
+            else:
+                used.update(names)
+                out.append(r)
+        return P(*out)
+    return tree_map_defs(spec, tree)
+
+
+def param_shapes(tree: Pytree) -> Pytree:
+    return tree_map_defs(lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), tree)
+
+
+def count_params(tree: Pytree) -> int:
+    return sum(math.prod(d.shape) for d in jax.tree.leaves(tree, is_leaf=is_def))
+
+
+def init_params(tree: Pytree, key: jax.Array) -> Pytree:
+    """Materialize parameters. Deterministic per-leaf keys derived by path."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_def)
+    keys = jax.random.split(key, max(len(leaves), 1))
+
+    def make(d: ParamDef, k):
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, d.dtype)
+        if d.init == "ones":
+            return jnp.ones(d.shape, d.dtype)
+        if d.init == "scaled":
+            fan = d.fan_in if d.fan_in is not None else (d.shape[-2] if len(d.shape) >= 2 else d.shape[-1])
+            std = d.scale / math.sqrt(max(fan, 1))
+        else:  # normal
+            std = 0.02 * d.scale
+        return (jax.random.normal(k, d.shape, jnp.float32) * std).astype(d.dtype)
+
+    return jax.tree.unflatten(treedef, [make(d, k) for d, k in zip(leaves, keys)])

@@ -1,0 +1,202 @@
+"""Mamba2 (SSD — state-space duality) block in pure JAX.
+
+The chunked dual form: within a chunk the recurrence is evaluated as a masked
+quadratic (attention-like) product; across chunks a small per-head state
+(P x N) is carried by a scan. This is the portable XLA path; the Pallas TPU
+kernel in ``repro.kernels.ssd`` implements the same algorithm with explicit
+VMEM tiling and is validated against ``repro.kernels.ssd.ref``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamDef
+from repro.models.layers import rmsnorm
+
+F32 = jnp.float32
+
+
+def ssm_defs(cfg: ModelConfig):
+    D, din = cfg.d_model, cfg.d_inner
+    H, P, N, W = cfg.ssm_num_heads, cfg.ssm_head_dim, cfg.ssm_state_dim, cfg.ssm_conv_width
+    return {
+        "w_z": ParamDef((D, H, P), ("fsdp", "tp", "tp2"), init="scaled", fan_in=D),
+        "w_x": ParamDef((D, H, P), ("fsdp", "tp", "tp2"), init="scaled", fan_in=D),
+        "w_B": ParamDef((D, N), ("fsdp", None), init="scaled", fan_in=D),
+        "w_C": ParamDef((D, N), ("fsdp", None), init="scaled", fan_in=D),
+        "w_dt": ParamDef((D, H), ("fsdp", "tp"), init="scaled", fan_in=D),
+        "dt_bias": ParamDef((H,), ("tp",), init="zeros"),
+        "A_log": ParamDef((H,), ("tp",), init="zeros"),       # A = -exp(A_log)
+        "D_skip": ParamDef((H,), ("tp",), init="ones"),
+        "conv_x": ParamDef((W, H, P), (None, "tp", "tp2"), init="scaled", fan_in=W),
+        "conv_B": ParamDef((W, N), (None, None), init="scaled", fan_in=W),
+        "conv_C": ParamDef((W, N), (None, None), init="scaled", fan_in=W),
+        "norm": ParamDef((H, P), ("tp", "tp2"), init="ones"),
+        "w_out": ParamDef((H, P, D), ("tp", "tp2", "fsdp"), init="scaled", fan_in=din),
+    }
+
+
+def _causal_conv(x, kernel):
+    """Depthwise causal conv. x: (B, S, C...), kernel: (W, C...)."""
+    W = kernel.shape[0]
+    pads = [(0, 0), (W - 1, 0)] + [(0, 0)] * (x.ndim - 2)
+    xp = jnp.pad(x, pads)
+    out = sum(xp[:, i:i + x.shape[1]] * kernel[i] for i in range(W))
+    return out
+
+
+def segsum_decay(dA):
+    """dA: (..., L) -> decay matrix exp(cumsum_i - cumsum_j) lower-triangular.
+    Returns (..., L, L) in f32, zero above diagonal."""
+    L = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(mask, jnp.exp(diff), 0.0)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """SSD forward. x: (b,s,h,p) dt: (b,s,h) A: (h,) B,C: (b,s,n).
+    Returns y: (b,s,h,p) f32 and final state (b,h,p,n)."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    S = s + pad
+    nc = S // chunk
+    xc = x.reshape(b, nc, chunk, h, p).astype(F32)
+    dtc = dt.reshape(b, nc, chunk, h).astype(F32)
+    Bc = B.reshape(b, nc, chunk, n).astype(F32)
+    Cc = C.reshape(b, nc, chunk, n).astype(F32)
+
+    dA = dtc * A.astype(F32)                                  # (b,nc,l,h)
+    dA_h = dA.transpose(0, 1, 3, 2)                           # (b,nc,h,l)
+    cums = jnp.cumsum(dA_h, axis=-1)                          # (b,nc,h,l)
+
+    # ---- intra-chunk (quadratic) term
+    Lmat = segsum_decay(dA_h)                                 # (b,nc,h,l,l)
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)                # (b,nc,l,l)
+    att = cb[:, :, None] * Lmat * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", att, xc)
+
+    # ---- per-chunk input -> state
+    decay_to_end = jnp.exp(cums[..., -1:] - cums)             # (b,nc,h,l)
+    sx = xc * (dtc * decay_to_end.transpose(0, 1, 3, 2))[..., None]
+    states = jnp.einsum("bcln,bclhp->bchpn", Bc, sx)          # (b,nc,h,p,n)
+
+    # ---- inter-chunk recurrence
+    chunk_decay = jnp.exp(cums[..., -1])                      # (b,nc,h)
+
+    def step(carry, inp):
+        st_in = carry                                         # (b,h,p,n)
+        dec, add = inp
+        st_out = st_in * dec[..., None, None] + add
+        return st_out, st_in                                  # emit state *before* chunk
+
+    init = jnp.zeros((b, h, p, n), F32)
+    final, st_before = lax.scan(
+        step, init,
+        (chunk_decay.transpose(1, 0, 2), states.transpose(1, 0, 2, 3, 4)))
+    st_before = st_before.transpose(1, 0, 2, 3, 4)            # (b,nc,h,p,n)
+
+    y_inter = jnp.einsum("bcln,bchpn,bclh->bclhp", Cc, st_before,
+                         jnp.exp(cums).transpose(0, 1, 3, 2))
+    y = (y_intra + y_inter).reshape(b, S, h, p)[:, :s]
+    return y, final
+
+
+def ssd_decode_step(state, x, dt, A, B, C):
+    """One-token SSD update. state: (b,h,p,n); x: (b,h,p); dt: (b,h);
+    B,C: (b,n). Returns (y (b,h,p), new_state)."""
+    dA = jnp.exp(dt.astype(F32) * A.astype(F32))              # (b,h)
+    dBx = jnp.einsum("bn,bhp->bhpn", B.astype(F32),
+                     x.astype(F32) * dt.astype(F32)[..., None])
+    new_state = state * dA[..., None, None] + dBx
+    y = jnp.einsum("bhpn,bn->bhp", new_state, C.astype(F32))
+    return y, new_state
+
+
+def mamba_block(cfg: ModelConfig, p, x, *, use_kernel: bool = False):
+    """Full-sequence Mamba2 mixer. x: (B, S, D) ->
+    (out, (final_state, conv_tail)) where conv_tail holds the last W-1
+    pre-conv features (for decode continuation)."""
+    Bsz, S, D = x.shape
+    H, P, N, W = cfg.ssm_num_heads, cfg.ssm_head_dim, cfg.ssm_state_dim, cfg.ssm_conv_width
+    z = jnp.einsum("bsd,dhp->bshp", x, p["w_z"], preferred_element_type=F32)
+    xin = jnp.einsum("bsd,dhp->bshp", x, p["w_x"],
+                     preferred_element_type=F32).astype(x.dtype)
+    Bv = jnp.einsum("bsd,dn->bsn", x, p["w_B"],
+                    preferred_element_type=F32).astype(x.dtype)
+    Cv = jnp.einsum("bsd,dn->bsn", x, p["w_C"],
+                    preferred_element_type=F32).astype(x.dtype)
+    dt = jnp.einsum("bsd,dh->bsh", x, p["w_dt"], preferred_element_type=F32)
+    dt = jax.nn.softplus(dt + p["dt_bias"].astype(F32))
+
+    # pre-conv features for the decode conv ring (last W-1 steps)
+    pre = jnp.concatenate([xin.reshape(Bsz, S, H * P), Bv, Cv], -1)
+    conv_tail = pre[:, -(W - 1):] if S >= W - 1 else jnp.pad(
+        pre, ((0, 0), (W - 1 - S, 0), (0, 0)))
+
+    xin = jax.nn.silu(_causal_conv(xin, p["conv_x"]).astype(F32)).astype(x.dtype)
+    Bv = jax.nn.silu(_causal_conv(Bv, p["conv_B"]).astype(F32)).astype(x.dtype)
+    Cv = jax.nn.silu(_causal_conv(Cv, p["conv_C"]).astype(F32)).astype(x.dtype)
+
+    A = -jnp.exp(p["A_log"].astype(F32))
+    if use_kernel:
+        from repro.kernels.ssd import ops as ssd_ops
+        y, final = ssd_ops.ssd(xin, dt, A, Bv, Cv, chunk=cfg.ssm_chunk)
+    else:
+        y, final = ssd_chunked(xin, dt, A, Bv, Cv, cfg.ssm_chunk)
+    y = y + p["D_skip"].astype(F32)[None, None, :, None] * xin.astype(F32)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y.astype(x.dtype), p["norm"])
+    out = jnp.einsum("bshp,hpd->bsd", y, p["w_out"], preferred_element_type=F32)
+    return out.astype(x.dtype), (final, conv_tail)
+
+
+def mamba_block_decode(cfg: ModelConfig, p, x, cache):
+    """One-token Mamba2 step. x: (B, 1, D);
+    cache: {'state': (B,H,P,N), 'conv': (B, W-1, H*P + 2N)}."""
+    Bsz, _, D = x.shape
+    H, P, N, W = cfg.ssm_num_heads, cfg.ssm_head_dim, cfg.ssm_state_dim, cfg.ssm_conv_width
+    xt = x[:, 0]
+    z = jnp.einsum("bd,dhp->bhp", xt, p["w_z"], preferred_element_type=F32)
+    xin = jnp.einsum("bd,dhp->bhp", xt, p["w_x"], preferred_element_type=F32)
+    Bv = jnp.einsum("bd,dn->bn", xt, p["w_B"], preferred_element_type=F32)
+    Cv = jnp.einsum("bd,dn->bn", xt, p["w_C"], preferred_element_type=F32)
+    dt = jnp.einsum("bd,dh->bh", xt, p["w_dt"], preferred_element_type=F32)
+    dt = jax.nn.softplus(dt + p["dt_bias"].astype(F32))
+
+    # conv ring: cache['conv'] holds the last W-1 pre-conv features
+    feat = jnp.concatenate([xin.reshape(Bsz, H * P), Bv, Cv], -1)  # (B, HP+2N)
+    hist = jnp.concatenate([cache["conv"], feat[:, None, :]], 1)   # (B, W, .)
+    kx = p["conv_x"].reshape(W, H * P).astype(F32)
+    kB = p["conv_B"].astype(F32)
+    kC = p["conv_C"].astype(F32)
+    xc = jnp.einsum("bwc,wc->bc", hist[..., :H * P].astype(F32), kx)
+    Bc = jnp.einsum("bwc,wc->bc", hist[..., H * P:H * P + N].astype(F32), kB)
+    Cc = jnp.einsum("bwc,wc->bc", hist[..., H * P + N:].astype(F32), kC)
+    xc = jax.nn.silu(xc).reshape(Bsz, H, P)
+    Bc, Cc = jax.nn.silu(Bc), jax.nn.silu(Cc)
+
+    A = -jnp.exp(p["A_log"].astype(F32))
+    y, new_state = ssd_decode_step(cache["state"].astype(F32), xc, dt, A, Bc, Cc)
+    y = y + p["D_skip"].astype(F32)[None, :, None] * xc
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y.astype(x.dtype), p["norm"])
+    out = jnp.einsum("bhp,hpd->bd", y, p["w_out"], preferred_element_type=F32)
+    new_cache = {"state": new_state.astype(cache["state"].dtype),
+                 "conv": hist[:, 1:].astype(cache["conv"].dtype)}
+    return out[:, None, :].astype(x.dtype), new_cache
+
+
+def ssm_cache_shape(cfg: ModelConfig, batch: int):
+    H, P, N, W = cfg.ssm_num_heads, cfg.ssm_head_dim, cfg.ssm_state_dim, cfg.ssm_conv_width
+    return {"state": (batch, H, P, N), "conv": (batch, W - 1, H * P + 2 * N)}

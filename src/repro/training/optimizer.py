@@ -1,0 +1,93 @@
+"""AdamW (from scratch) with global-norm clipping and cosine schedule.
+
+Optimizer state (m, v) is float32 and inherits each parameter's sharding, so
+under FSDP+TP the states are fully distributed (ZeRO-ish by construction).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    min_lr_frac: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    state_dtype: Any = jnp.float32   # set bfloat16 to halve optimizer memory
+
+
+def schedule(oc: OptConfig, step):
+    step = step.astype(F32)
+    warm = jnp.minimum(step / jnp.maximum(oc.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - oc.warmup_steps)
+                 / jnp.maximum(oc.total_steps - oc.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    frac = oc.min_lr_frac + (1 - oc.min_lr_frac) * cos
+    return oc.lr * warm * frac
+
+
+def init_opt_state(params, oc: OptConfig):
+    zeros = lambda p: jnp.zeros(p.shape, oc.state_dtype)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _decay_mask(path) -> bool:
+    """Apply weight decay only to matrices (skip norms/biases/scalars)."""
+    name = str(path[-1].key) if hasattr(path[-1], "key") else str(path[-1])
+    return name not in ("w", "b", "bq", "bk", "bv", "b1", "b2", "dt_bias",
+                        "A_log", "D_skip", "norm", "kv_norm")
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(x.astype(F32) ** 2)
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, opt_state, oc: OptConfig):
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    lr = schedule(oc, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, oc.clip_norm / jnp.maximum(gnorm, 1e-9))
+
+    b1, b2 = oc.beta1, oc.beta2
+    bc1 = 1 - b1 ** step.astype(F32)
+    bc2 = 1 - b2 ** step.astype(F32)
+
+    flat_p, treedef = jax.tree.flatten_with_path(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+
+    new_p, new_m, new_v = [], [], []
+    for (path, p), g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        g = g.astype(F32) * scale
+        m2 = b1 * m.astype(F32) + (1 - b1) * g
+        v2 = b2 * v.astype(F32) + (1 - b2) * g * g
+        upd = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + oc.eps)
+        if oc.weight_decay and _decay_mask(path):
+            upd = upd + oc.weight_decay * p.astype(F32)
+        new_p.append((p.astype(F32) - lr * upd).astype(p.dtype))
+        new_m.append(m2.astype(oc.state_dtype))
+        new_v.append(v2.astype(oc.state_dtype))
+
+    tdef = jax.tree.structure(params)
+    out_params = jax.tree.unflatten(tdef, new_p)
+    new_state = {"m": jax.tree.unflatten(tdef, new_m),
+                 "v": jax.tree.unflatten(tdef, new_v),
+                 "step": step}
+    return out_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,126 @@
+"""train_step / prefill_step / serve_step builders.
+
+``build_train_step`` returns a function (params, opt_state, batch) ->
+(params, opt_state, metrics) with microbatch gradient accumulation
+(lax.scan), remat, and activation sharding constraints. All builders are
+mesh-agnostic: pass a mesh to get sharding hints, or none for single-device
+CPU tests.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import model as M
+from repro.training.optimizer import OptConfig, adamw_update
+from repro.distrib import sharding as SH
+
+F32 = jnp.float32
+
+
+def choose_grad_accum(cfg: ModelConfig, shape: ShapeConfig,
+                      sizes: dict[str, int]) -> int:
+    """Microbatch count: keep per-device microbatch tokens bounded."""
+    import math
+    bax = SH.batch_axes(sizes, shape.global_batch)
+    shards = math.prod(sizes[a] for a in bax) if bax else 1
+    per_dev = shape.global_batch // shards
+    target_tokens = 8192 if cfg.d_model >= 8192 else 16384
+    per_seq = shape.seq_len
+    want = max(1, (per_dev * per_seq) // target_tokens)
+    # largest divisor of per_dev not exceeding want
+    best = 1
+    for a in range(1, per_dev + 1):
+        if per_dev % a == 0 and a <= want:
+            best = a
+    return best
+
+
+def build_train_step(cfg: ModelConfig, oc: OptConfig, *,
+                     mesh: Mesh | None = None,
+                     shape: ShapeConfig | None = None,
+                     grad_accum: int | None = None,
+                     remat: bool = True, unroll: bool = False,
+                     accum_dtype=F32):
+    shardings = None
+    if mesh is not None and shape is not None:
+        if grad_accum is None:
+            grad_accum = choose_grad_accum(cfg, shape, SH.mesh_sizes(mesh))
+        shardings = SH.activation_shardings(cfg, mesh, shape,
+                                            grad_accum=grad_accum)
+    grad_accum = grad_accum or 1
+
+    def micro_loss(params, mb):
+        return M.loss_fn(cfg, params, mb, shardings=shardings, remat=remat,
+                         unroll=unroll)
+
+    def train_step(params, opt_state, batch):
+        if grad_accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                micro_loss, has_aux=True)(params, batch)
+        else:
+            def split(x):
+                return x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                 + x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def acc_fn(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = jax.value_and_grad(micro_loss, has_aux=True)(
+                    params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(accum_dtype), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype),
+                              params)
+            (grads, loss_sum), _ = lax.scan(acc_fn, (g0, jnp.zeros((), F32)),
+                                            micro,
+                                            unroll=True if unroll else 1)
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            loss = loss_sum / grad_accum
+            metrics = {}
+
+        params, opt_state, opt_metrics = adamw_update(params, grads,
+                                                      opt_state, oc)
+        out = {"loss": loss, **opt_metrics}
+        return params, opt_state, out
+
+    return train_step
+
+
+def build_prefill_step(cfg: ModelConfig, *, mesh: Mesh | None = None,
+                       shape: ShapeConfig | None = None,
+                       unroll: bool = False):
+    shardings = None
+    if mesh is not None and shape is not None:
+        shardings = SH.activation_shardings(cfg, mesh, shape)
+
+    def prefill_step(params, batch):
+        logits, caches = M.forward_prefill(
+            cfg, params, batch["tokens"],
+            enc_embeds=batch.get("enc_embeds"),
+            img_embeds=batch.get("img_embeds"),
+            shardings=shardings, unroll=unroll)
+        return logits, caches
+
+    return prefill_step
+
+
+def build_serve_step(cfg: ModelConfig, *, pos: int | None = None,
+                     unroll: bool = False):
+    """One-token decode. `pos` static (dry-run) or traced via the argument."""
+
+    def serve_step(params, caches, token, position):
+        p = pos if pos is not None else position
+        logits, deltas = M.forward_decode(cfg, params, token, p, caches,
+                                          unroll=unroll)
+        return logits, deltas
+
+    return serve_step

@@ -1,0 +1,186 @@
+"""Homa simulator invariants + protocol behaviour tests (the paper's §3
+mechanisms), with hypothesis property tests on the priority-allocation
+policy."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sim import SimConfig, run_sim
+from repro.core.workloads import MessageTable, make_messages, sample_sizes
+from repro.core.priorities import (allocate_priorities, equal_bytes_cutoffs,
+                                   pias_thresholds)
+
+
+def table_from(src, dst, size, arrival, slot_bytes=256):
+    return MessageTable(np.asarray(src, np.int32), np.asarray(dst, np.int32),
+                        np.asarray(size, np.int64),
+                        np.asarray(arrival, np.int32), "custom", 0.0,
+                        slot_bytes)
+
+
+SMALL = dict(n_hosts=4, max_slots=4000, ring_cap=512)
+
+
+# ------------------------------------------------------------ invariants ---
+
+@pytest.mark.parametrize("proto", ["homa", "basic", "phost", "pias",
+                                   "pfabric", "ndp"])
+def test_conservation_and_completion(proto):
+    tbl = make_messages("W2", n_hosts=4, load=0.6, n_messages=300,
+                        slot_bytes=256, seed=5)
+    cfg = SimConfig(protocol=proto, **SMALL)
+    stx = run_sim(cfg, tbl, return_state=True)
+    st, S = stx["state"], stx["static"]
+    # no chunk created or destroyed: recv + in-buffer + lost == sent
+    in_buf = int(st["r_valid"].sum())
+    assert int(st["recv"].sum()) + in_buf + stx["lost_chunks"] \
+        == int(st["sent"].sum())
+    # receivers never got more than the message size
+    assert (st["recv"] <= S["size"]).all()
+    # completed messages are fully received
+    done = st["completion"] >= 0
+    np.testing.assert_array_equal(st["recv"][done], S["size"][done])
+    # senders never send beyond size or grant
+    assert (st["sent"] <= S["size"]).all()
+
+
+def test_grant_invariant_rtt_bound():
+    """Granted-but-not-received never exceeds RTTbytes (paper §3.3)."""
+    tbl = make_messages("W4", n_hosts=4, load=0.7, n_messages=200,
+                        slot_bytes=256, seed=6)
+    cfg = SimConfig(protocol="homa", **SMALL)
+    stx = run_sim(cfg, tbl, return_state=True)
+    st = stx["state"]
+    outstanding = st["grant_r"] - st["recv"]
+    assert (outstanding <= cfg.rtt_slots).all()
+
+
+def test_unloaded_slowdown_near_one():
+    rng = np.random.default_rng(0)
+    n = 60
+    tbl = table_from(rng.integers(0, 4, n),
+                     (rng.integers(0, 4, n) + 1) % 4,
+                     rng.integers(100, 50_000, n),
+                     np.arange(n) * 400)           # sparse arrivals
+    # fix dst != src
+    tbl.dst[tbl.dst == tbl.src] = (tbl.src[tbl.dst == tbl.src] + 1) % 4
+    cfg = SimConfig(protocol="homa", n_hosts=4, max_slots=30_000)
+    stx = run_sim(cfg, tbl)
+    sl = stx["slowdown"][stx["done"]]
+    assert stx["n_complete"] >= n - 2
+    assert np.nanmedian(sl) <= 1.05
+    assert np.nanpercentile(sl, 99) <= 1.3
+
+
+def test_srpt_shorter_message_wins():
+    """Two messages to one receiver; the short one preempts and finishes
+    first even though the long one started earlier."""
+    tbl = table_from([1, 2], [0, 0], [200_000, 2_000], [0, 120])
+    cfg = SimConfig(protocol="homa", n_hosts=4, max_slots=6000)
+    stx = run_sim(cfg, tbl)
+    assert stx["done"].all()
+    assert stx["completion"][1] < stx["completion"][0]
+
+
+def test_overcommitment_fills_idle_downlink():
+    """Fig. 6 scenario: S1's SRPT prefers its message to R2 (shorter), so
+    R0's single grant to S1 goes unanswered; with overcommitment R0 also
+    grants S2's longer message and its downlink stays busy."""
+    # S1 -> R0 (60k): blind goes out first, then S1's SRPT switches to its
+    # shorter m1 (40k -> R2) when it arrives, stalling m0. R0 (K=1) keeps
+    # granting stalled m0; S2's m2 (80k) can only use the idle downlink if
+    # R0 overcommits.
+    tbl = table_from([1, 1, 2], [0, 2, 0], [60_000, 40_000, 80_000],
+                     [0, 50, 0])
+    m2_done = {}
+    for k in (1, 4):
+        cfg = SimConfig(protocol="homa", overcommit=k, n_hosts=4,
+                        max_slots=3000)
+        stx = run_sim(cfg, tbl)
+        assert stx["done"].all()
+        m2_done[k] = int(stx["completion"][2])
+    # with overcommitment m2 streams concurrently instead of waiting for
+    # m0's run-to-completion -> finishes much earlier
+    assert m2_done[4] * 1.5 < m2_done[1], m2_done
+
+
+def test_homa_beats_basic_tail_latency():
+    tbl = make_messages("W3", n_hosts=4, load=0.8, n_messages=600,
+                        slot_bytes=256, seed=7)
+    p99 = {}
+    for proto in ("homa", "basic"):
+        cfg = SimConfig(protocol=proto, n_hosts=4, max_slots=25_000,
+                        ring_cap=1024)
+        stx = run_sim(cfg, tbl)
+        ok = stx["done"] & (stx["size_bytes"] < 3000)
+        p99[proto] = np.percentile(stx["slowdown"][ok], 99)
+    assert p99["homa"] * 2 < p99["basic"], p99
+
+
+def test_incast_unsched_limit_bounds_buffers():
+    """Paper §3.6: marking messages with a small unscheduled limit bounds
+    TOR buffer use under a 30-way incast."""
+    n = 30
+    tbl = table_from(np.arange(n) % 3 + 1, np.zeros(n), np.full(n, 9728),
+                     np.zeros(n))
+    cfg = SimConfig(protocol="homa", n_hosts=4, max_slots=4000)
+    free = run_sim(cfg, tbl)
+    lim = run_sim(cfg, tbl, unsched_limit_bytes=512)
+    assert lim["q_max_bytes"][0] < free["q_max_bytes"][0]
+    assert lim["done"].all()
+
+
+# ------------------------------------------------- priority allocation -----
+
+def test_allocation_matches_paper_shape():
+    """W1-like tiny-message workloads get many unscheduled levels; W5-like
+    heavy-tailed ones get few (paper Fig. 21 / §5.2)."""
+    w1 = allocate_priorities(sample_sizes("W1", 20_000,
+                                          np.random.default_rng(0)),
+                             unsched_limit=9728)
+    w5 = allocate_priorities(sample_sizes("W5", 20_000,
+                                          np.random.default_rng(0)),
+                             unsched_limit=9728)
+    assert w1.n_unsched >= 6
+    assert w5.n_unsched <= 2
+    assert w1.unsched_bytes_frac > 0.9
+    assert w5.unsched_bytes_frac < 0.2
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 8), st.integers(0, 10_000))
+def test_cutoffs_balance_bytes(n_levels, seed):
+    rng = np.random.default_rng(seed)
+    sizes = sample_sizes("W3", 5000, rng)
+    w = np.minimum(sizes, 9728).astype(np.float64)
+    cuts = equal_bytes_cutoffs(sizes, w, n_levels)
+    assert len(cuts) == n_levels - 1
+    assert all(cuts[i] <= cuts[i + 1] for i in range(len(cuts) - 1))
+    # each bucket's weight is within 2x of the ideal equal share
+    edges = [0] + list(cuts) + [int(sizes.max()) + 1]
+    shares = []
+    for lo, hi in zip(edges[:-1], edges[1:]):
+        m = (sizes > lo) & (sizes <= hi) if lo else (sizes <= hi)
+        shares.append(w[m].sum())
+    total = sum(shares)
+    assert total > 0
+    for s in shares[:-1]:
+        assert s <= 2.2 * total / n_levels
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_unsched_prio_monotone(seed):
+    rng = np.random.default_rng(seed)
+    sizes = sample_sizes("W2", 3000, rng)
+    alloc = allocate_priorities(sizes, unsched_limit=9728)
+    s_sorted = np.sort(sizes)
+    prios = alloc.unsched_prio(s_sorted)
+    assert (np.diff(prios) <= 0).all()          # bigger msg -> lower prio
+    assert prios.max() == alloc.n_prios - 1
+
+
+def test_pias_thresholds_monotone():
+    sizes = sample_sizes("W4", 4000, np.random.default_rng(1))
+    th = pias_thresholds(sizes, 8)
+    assert all(th[i] <= th[i + 1] for i in range(len(th) - 1))

@@ -1,0 +1,150 @@
+"""Per-kernel validation: shape/dtype sweeps asserting allclose against the
+pure-jnp oracles (interpret mode on CPU), plus hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.attention.ops import attention
+from repro.kernels.attention.ref import attention_ref
+from repro.kernels.ssd.ops import ssd
+from repro.kernels.ssd.ref import ssd_ref
+from repro.kernels.arbiter import ops as arb_ops
+from repro.kernels.arbiter.ref import priority_arbiter_ref, srpt_topk_ref
+
+
+# ------------------------------------------------------------ attention ----
+
+ATTN_CASES = [
+    # (B, Sq, Skv, H, KV, d, causal, window, dtype)
+    (1, 64, 64, 4, 4, 32, True, None, jnp.float32),
+    (2, 96, 96, 4, 2, 16, True, None, jnp.float32),
+    (1, 128, 128, 8, 1, 64, True, 32, jnp.float32),
+    (2, 64, 64, 2, 2, 32, False, None, jnp.float32),
+    (1, 80, 80, 4, 4, 32, True, None, jnp.bfloat16),
+    (1, 33, 33, 2, 2, 8, True, None, jnp.float32),   # ragged block
+]
+
+
+@pytest.mark.parametrize("case", ATTN_CASES)
+def test_attention_matches_ref(case):
+    B, Sq, Skv, H, KV, d, causal, window, dtype = case
+    ks = jax.random.split(jax.random.key(42), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, d), dtype)
+    k = jax.random.normal(ks[1], (B, Skv, KV, d), dtype)
+    v = jax.random.normal(ks[2], (B, Skv, KV, d), dtype)
+    out = attention(q, k, v, causal=causal, window=window,
+                    block_q=32, block_kv=32, interpret=True)
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 3), st.integers(1, 4), st.integers(1, 3),
+       st.sampled_from([8, 16, 32]), st.booleans())
+def test_attention_property(b, kv, g, d, causal):
+    """Rows of the attention output are convex combinations of V rows:
+    output must lie within [min(v), max(v)] per dim."""
+    h = kv * g
+    s = 40
+    ks = jax.random.split(jax.random.key(b * 100 + kv * 10 + g), 3)
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, kv, d))
+    v = jax.random.normal(ks[2], (b, s, kv, d))
+    out = np.asarray(attention(q, k, v, causal=causal, block_q=16,
+                               block_kv=16, interpret=True), np.float32)
+    vmax = float(np.asarray(v, np.float32).max())
+    vmin = float(np.asarray(v, np.float32).min())
+    assert out.max() <= vmax + 1e-3 and out.min() >= vmin - 1e-3
+    assert np.isfinite(out).all()
+
+
+# ------------------------------------------------------------------ SSD ----
+
+SSD_CASES = [
+    # (B, S, H, P, N, chunk)
+    (1, 32, 2, 8, 8, 8),
+    (2, 64, 3, 8, 16, 16),
+    (1, 48, 1, 16, 16, 16),   # pad path
+    (2, 128, 4, 16, 32, 32),
+]
+
+
+@pytest.mark.parametrize("case", SSD_CASES)
+def test_ssd_matches_ref(case):
+    B, S, H, P, N, chunk = case
+    ks = jax.random.split(jax.random.key(7), 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, N)) * 0.5
+    Cm = jax.random.normal(ks[4], (B, S, N)) * 0.5
+    y, fs = ssd(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+    yr, fr = ssd_ref(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=5e-4, rtol=5e-4)
+    np.testing.assert_allclose(np.asarray(fs), np.asarray(fr),
+                               atol=5e-4, rtol=5e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_ssd_decay_property(seed):
+    """With A << 0 (fast decay) the state forgets: doubling early inputs must
+    not change late outputs materially."""
+    ks = jax.random.split(jax.random.key(seed), 5)
+    B, S, H, P, N = 1, 32, 1, 4, 4
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jnp.ones((B, S, H)) * 2.0
+    A = jnp.full((H,), -8.0)
+    Bm = jax.random.normal(ks[3], (B, S, N))
+    Cm = jax.random.normal(ks[4], (B, S, N))
+    y1, _ = ssd(x, dt, A, Bm, Cm, chunk=8, interpret=True)
+    x2 = x.at[:, :8].mul(2.0)
+    y2, _ = ssd(x2, dt, A, Bm, Cm, chunk=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(y1[:, -8:]), np.asarray(y2[:, -8:]),
+                               atol=1e-3)
+
+
+# -------------------------------------------------------------- arbiter ----
+
+@pytest.mark.parametrize("H,cap", [(8, 256), (16, 512), (4, 64), (13, 100)])
+def test_arbiter_matches_ref(H, cap):
+    rng = np.random.default_rng(H * cap)
+    prio = jnp.asarray(rng.integers(0, 8, (H, cap)), jnp.int32)
+    seq = jnp.asarray(rng.integers(0, 10_000, (H, cap)), jnp.int32)
+    elig = jnp.asarray(rng.random((H, cap)) < 0.3)
+    bp, bi = arb_ops.arbitrate(prio, seq, elig, interpret=True)
+    rp, ri = priority_arbiter_ref(prio, seq, elig)
+    np.testing.assert_array_equal(np.asarray(bp), np.asarray(rp))
+    # compare selected (prio, seq) rather than index (ties broken anyhow)
+    has = np.asarray(rp) < 2 ** 30
+    sel_k = np.asarray(seq)[np.arange(H), np.asarray(bi)]
+    ref_k = np.asarray(seq)[np.arange(H), np.asarray(ri)]
+    np.testing.assert_array_equal(sel_k[has], ref_k[has])
+
+
+@pytest.mark.parametrize("H,M,K", [(8, 512, 7), (16, 1024, 4), (4, 128, 1),
+                                   (8, 512, 8)])
+def test_topk_matches_ref(H, M, K):
+    rng = np.random.default_rng(H + M + K)
+    keys = jnp.asarray(rng.integers(0, 1 << 28, (H, M)), jnp.int32)
+    keys = jnp.where(jnp.asarray(rng.random((H, M)) < 0.5), keys, 0)
+    out = arb_ops.topk(keys, K, interpret=True)
+    ref = srpt_topk_ref(keys, K)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 12), st.integers(1, 60), st.integers(1, 8),
+       st.integers(0, 2 ** 16))
+def test_topk_property(H, M, K, seed):
+    rng = np.random.default_rng(seed)
+    keys = jnp.asarray(rng.integers(0, 1 << 20, (H, M)), jnp.int32)
+    out = np.asarray(arb_ops.topk(keys, K, interpret=True))
+    ref = np.asarray(srpt_topk_ref(keys, K))
+    np.testing.assert_array_equal(out, ref)

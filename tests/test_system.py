@@ -1,0 +1,36 @@
+"""End-to-end behaviour tests for the paper's system: the full Homa stack
+(workload -> priority allocation -> simulation -> SRPT outcomes) plus the
+training stack smoke (config -> data -> step -> checkpoint)."""
+import numpy as np
+
+from repro.core.sim import SimConfig, run_sim
+from repro.core.workloads import make_messages
+
+
+def test_end_to_end_homa_pipeline():
+    """Full pipeline: synthesize W2, allocate priorities from its CDF,
+    simulate at 70% load, and verify the paper's qualitative outcome —
+    small messages see near-ideal latency while the system stays lossless
+    and conserves bytes."""
+    tbl = make_messages("W2", n_hosts=6, load=0.7, n_messages=800,
+                        slot_bytes=256, seed=11)
+    cfg = SimConfig(n_hosts=6, protocol="homa", max_slots=40_000,
+                    ring_cap=2048)
+    st = run_sim(cfg, tbl, return_state=True)
+    # allocation reflects the workload's byte-weighted CDF (our W2
+    # synthesis is heavier-tailed than the paper's — see EXPERIMENTS notes —
+    # so it earns fewer unscheduled levels than the paper's ~6)
+    assert 1 <= st["alloc"].n_unsched <= 7
+    # lossless
+    assert st["lost_chunks"] == 0
+    # conservation
+    s = st["state"]
+    assert int(s["recv"].sum()) + int(s["r_valid"].sum()) \
+        == int(s["sent"].sum())
+    # small-message tail near ideal
+    ok = st["done"] & (st["size_bytes"] < 1000)
+    assert ok.sum() > 50
+    p99 = np.percentile(st["slowdown"][ok], 99)
+    assert p99 < 3.5, p99
+    med = np.median(st["slowdown"][st["done"]])
+    assert med < 1.5, med
