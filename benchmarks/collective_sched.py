@@ -93,7 +93,7 @@ def predicted(full: bool = False):
     comes from in-order senders, and either chunking (message orientation)
     or sender SRPT removes it. The makespan itself is bandwidth+straggler
     bound and schedule-invariant, as expected."""
-    from repro.core.sim import SimConfig, run_sim
+    from repro.core.sim import SimConfig, simulate
     from repro.core.workloads import MessageTable
     from repro.distrib.homa_collectives import SyncConfig, chunk_plan
     from repro.configs.reduced import reduced_config
@@ -135,18 +135,17 @@ def predicted(full: bool = False):
         for proto in ("homa", "basic"):
             sim = SimConfig(n_hosts=n_hosts, protocol=proto,
                             max_slots=40_000, ring_cap=4096)
-            st = run_sim(sim, tbl)
-            done = st["done"]
-            fin = int(st["completion"][done].max()) if done.any() else -1
+            st = simulate(sim, tbl)
+            done = st.done
+            fin = int(st.completion[done].max()) if done.any() else -1
             # the makespan is bandwidth+straggler-bound for ANY schedule;
             # what scheduling buys is EARLY completions (first tensors
             # unblock overlapped optimizer updates) and small-message
             # latency (the paper's whole point):
-            comp = np.sort(st["completion"][done])
+            comp = np.sort(st.completion[done])
             half = int(comp[len(comp) // 2]) if len(comp) else -1
-            small = done & (st["size_bytes"] < 2048)
-            p99s = (float(np.percentile(st["slowdown"][small], 99))
-                    if small.any() else -1)
+            small = done & (st.size_bytes < 2048)
+            p99s = (st.percentile(99, small) or -1 if small.any() else -1)
             rows.append(dict(mode="chunked" if chunked else "unchunked",
                              protocol=proto,
                              all_done=bool(done.all()),

@@ -5,6 +5,15 @@ scale (CPU budget): 8 hosts instead of 144, ~2000 messages per run. The
 qualitative claims being validated (protocol ordering, slowdown bands,
 utilization ceilings, queue bounds) are scale-robust; EXPERIMENTS.md
 discusses the deltas. `--full` increases scale.
+
+Two entry points, both returning the same JSON-safe summary schema
+(:meth:`repro.core.SimResult.summary` plus the run's parameters):
+
+  ``sim_run``    one cached point (legacy path, still used where points
+                 differ in compile-time config such as slot size)
+  ``sim_sweep``  a list of points sharing the protocol/topology config,
+                 batched through ``run_sweep`` so the whole group costs
+                 one jit trace instead of one per point
 """
 from __future__ import annotations
 
@@ -14,9 +23,9 @@ from pathlib import Path
 
 import numpy as np
 
-from repro.core.sim import SimConfig, run_sim, slowdown_percentiles
+from repro.core.sim import SimConfig, simulate, run_sweep
 from repro.core.workloads import make_messages
-from repro.core.priorities import allocate_priorities, PriorityAllocation
+from repro.core.priorities import PriorityAllocation
 
 ART = Path(__file__).resolve().parents[1] / "artifacts" / "bench"
 ART.mkdir(parents=True, exist_ok=True)
@@ -25,23 +34,48 @@ DEFAULT = dict(n_hosts=8, n_messages=2000, max_slots=60_000, ring_cap=2048,
                slot_bytes=256)
 
 
-def sim_run(*, workload: str, protocol: str, load: float, seed: int = 0,
-            n_hosts=None, n_messages=None, max_slots=None, ring_cap=None,
-            slot_bytes=None, overcommit=None, alloc: dict | None = None,
-            unsched_limit_bytes=None, cache: bool = True) -> dict:
-    """Run (or fetch cached) one simulation; returns JSON-safe summary."""
+def _merge_params(n_hosts, n_messages, max_slots, ring_cap, slot_bytes):
     p = {**DEFAULT}
     for k, v in dict(n_hosts=n_hosts, n_messages=n_messages,
                      max_slots=max_slots, ring_cap=ring_cap,
                      slot_bytes=slot_bytes).items():
         if v is not None:
             p[k] = v
+    return p
+
+
+def _point_key(*, workload, protocol, load, seed, overcommit, alloc,
+               unsched_limit_bytes, params) -> tuple[dict, Path]:
     keyd = dict(workload=workload, protocol=protocol, load=load, seed=seed,
                 overcommit=overcommit, alloc=alloc,
                 ul=(unsched_limit_bytes if not isinstance(
-                    unsched_limit_bytes, np.ndarray) else "array"), **p)
+                    unsched_limit_bytes, np.ndarray) else "array"), **params)
     h = hashlib.sha1(json.dumps(keyd, sort_keys=True).encode()).hexdigest()[:16]
-    fp = ART / f"sim_{h}.json"
+    return keyd, ART / f"sim_{h}.json"
+
+
+def _alloc_from_dict(alloc: dict | None) -> PriorityAllocation | None:
+    if not alloc:
+        return None
+    return PriorityAllocation(n_prios=alloc.get("n_prios", 8),
+                              n_unsched=alloc["n_unsched"],
+                              cutoffs=tuple(alloc.get("cutoffs", ())),
+                              unsched_bytes_frac=0.0)
+
+
+def _summarize(result, keyd) -> dict:
+    return {"params": keyd, **result.summary(warmup_frac=0.1)}
+
+
+def sim_run(*, workload: str, protocol: str, load: float, seed: int = 0,
+            n_hosts=None, n_messages=None, max_slots=None, ring_cap=None,
+            slot_bytes=None, overcommit=None, alloc: dict | None = None,
+            unsched_limit_bytes=None, cache: bool = True) -> dict:
+    """Run (or fetch cached) one simulation; returns JSON-safe summary."""
+    p = _merge_params(n_hosts, n_messages, max_slots, ring_cap, slot_bytes)
+    keyd, fp = _point_key(workload=workload, protocol=protocol, load=load,
+                          seed=seed, overcommit=overcommit, alloc=alloc,
+                          unsched_limit_bytes=unsched_limit_bytes, params=p)
     if cache and fp.exists():
         return json.loads(fp.read_text())
 
@@ -53,49 +87,65 @@ def sim_run(*, workload: str, protocol: str, load: float, seed: int = 0,
                     ring_cap=p["ring_cap"],
                     max_slots=min(p["max_slots"],
                                   int(tbl.arrival_slot.max()) + 20_000))
-    al = None
-    if alloc:
-        al = PriorityAllocation(n_prios=alloc.get("n_prios", 8),
-                                n_unsched=alloc["n_unsched"],
-                                cutoffs=tuple(alloc.get("cutoffs", ())),
-                                unsched_bytes_frac=0.0)
-    stats = run_sim(cfg, tbl, alloc=al,
-                    unsched_limit_bytes=unsched_limit_bytes)
-
-    # summarize (steady-state window: drop first 10% of arrivals)
-    warm = stats["size_bytes"].shape[0] // 10
-    ok = stats["done"].copy()
-    ok[:warm] = False
-    sl = stats["slowdown"]
-    out = {
-        "params": keyd,
-        "n_complete": stats["n_complete"],
-        "n_messages": stats["n_messages"],
-        "completion_rate": float(stats["done"].mean()),
-        "p99_by_size": slowdown_percentiles(
-            {**stats, "done": ok}, 99.0),
-        "busy_frac": float(np.mean(stats["busy_frac"])),
-        "wasted_frac": float(np.mean(stats["wasted_frac"])),
-        "q_mean_bytes": float(np.mean(stats["q_mean_bytes"])),
-        "q_max_bytes": float(np.max(stats["q_max_bytes"])),
-        "prio_drained_bytes": [int(x) for x in stats["prio_drained_bytes"]],
-        "lost_chunks": stats["lost_chunks"],
-        "alloc": {"n_unsched": stats["alloc"].n_unsched,
-                  "cutoffs": list(stats["alloc"].cutoffs),
-                  "unsched_frac": stats["alloc"].unsched_bytes_frac},
-        "p99_small": _pct(sl, ok & (stats["size_bytes"] < 1000), 99),
-        "p50_small": _pct(sl, ok & (stats["size_bytes"] < 1000), 50),
-        "p99_all": _pct(sl, ok, 99),
-        "p50_all": _pct(sl, ok, 50),
-    }
+    res = simulate(cfg, tbl, alloc=_alloc_from_dict(alloc),
+                   unsched_limit_bytes=unsched_limit_bytes)
+    out = _summarize(res, keyd)
     fp.write_text(json.dumps(out))
     return out
 
 
-def _pct(sl, mask, q):
-    if mask.sum() == 0:
-        return None
-    return float(np.percentile(sl[mask], q))
+def sim_sweep(points: list[dict], *, protocol: str, overcommit=None,
+              n_hosts=None, n_messages=None, max_slots=None, ring_cap=None,
+              slot_bytes=None, cache: bool = True) -> list[dict]:
+    """Cached batched runner: each point is a dict with ``workload`` and
+    ``load`` plus optional ``seed`` / ``alloc`` / ``unsched_limit_bytes``.
+    All points share the protocol/topology config; uncached points run
+    through :func:`repro.core.run_sweep` in one jit trace. Returns one
+    summary per point, in order.
+
+    Cache keys use the *configured* ``max_slots`` cap (exactly like
+    ``sim_run``), never the realized group horizon, so a point's cache
+    identity does not depend on which other points share its sweep and
+    fully-cached reruns skip table synthesis entirely. Uncached points
+    run at a shared horizon — the longest uncached table's, clamped to
+    the cap — recorded in the stored summary as ``max_slots_used``."""
+    p = _merge_params(n_hosts, n_messages, max_slots, ring_cap, slot_bytes)
+    keys = [_point_key(workload=pt["workload"], protocol=protocol,
+                       load=pt["load"], seed=pt.get("seed", 0),
+                       overcommit=overcommit, alloc=pt.get("alloc"),
+                       unsched_limit_bytes=pt.get("unsched_limit_bytes"),
+                       params=p)
+            for pt in points]
+    out: list[dict | None] = [None] * len(points)
+    todo = []
+    for i, (keyd, fp) in enumerate(keys):
+        if cache and fp.exists():
+            out[i] = json.loads(fp.read_text())
+        else:
+            todo.append(i)
+    if todo:
+        tables = {i: make_messages(points[i]["workload"],
+                                   n_hosts=p["n_hosts"],
+                                   load=points[i]["load"],
+                                   n_messages=p["n_messages"],
+                                   slot_bytes=p["slot_bytes"],
+                                   seed=points[i].get("seed", 0))
+                  for i in todo}
+        horizon = max(int(t.arrival_slot.max()) for t in tables.values())
+        ms = min(p["max_slots"], horizon + 20_000)
+        cfg = SimConfig(n_hosts=p["n_hosts"], slot_bytes=p["slot_bytes"],
+                        protocol=protocol, overcommit=overcommit,
+                        ring_cap=p["ring_cap"], max_slots=ms)
+        results = run_sweep(
+            cfg, [tables[i] for i in todo],
+            alloc=[_alloc_from_dict(points[i].get("alloc")) for i in todo],
+            unsched_limit_bytes=[points[i].get("unsched_limit_bytes")
+                                 for i in todo])
+        for i, res in zip(todo, results):
+            keyd, fp = keys[i]
+            out[i] = {**_summarize(res, keyd), "max_slots_used": ms}
+            fp.write_text(json.dumps(out[i]))
+    return out
 
 
 def emit(name: str, rows: list[dict]):

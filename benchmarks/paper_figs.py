@@ -1,35 +1,48 @@
 """One benchmark per paper table/figure (scaled; see common.py).
 
 Each fig*(full) function returns CSV rows; benchmarks/run.py orchestrates.
+Points that share their compile-time config (protocol, topology,
+overcommit, slot size) are grouped through ``sim_sweep`` so each group
+costs one jit trace; only figures that vary compile-time parameters per
+point (fig14: slot size, fig19: overcommit) still loop over ``sim_run``.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import sim_run, emit
+from benchmarks.common import sim_run, sim_sweep, emit
 
-PROTOS = ["homa", "basic", "phost", "pias", "pfabric"]
+# all six registered protocols, ndp included (it used to be implemented in
+# the simulator but omitted from every sweep)
+PROTOS = ["homa", "basic", "phost", "pias", "pfabric", "ndp"]
 LOADS_FIG12 = [0.8, 0.5]
+
+
+def _fig12_points(proto: str, workload: str, full: bool) -> list[dict]:
+    """The (load-swept) points one fig12/fig13 cell shares — one sim_sweep
+    group per (workload, protocol), so fig13 reuses fig12's cache."""
+    loads = LOADS_FIG12 if full else [0.8]
+    # NDP/pHost can't sustain 80% (paper): cap like the paper did
+    return [dict(workload=workload,
+                 load=(0.7 if proto in ("phost", "ndp") and ld > 0.7
+                       else ld))
+            for ld in loads]
 
 
 def fig12_slowdown(full: bool = False):
     """99p slowdown vs message size per (protocol, workload, load)."""
     workloads = ["W1", "W2", "W3", "W4", "W5"] if full else ["W2", "W4"]
     protos = PROTOS if full else ["homa", "basic", "phost", "pfabric"]
-    loads = LOADS_FIG12 if full else [0.8]
     rows = []
     for w in workloads:
         for proto in protos:
-            for load in loads:
-                # NDP/pHost can't sustain 80% (paper): cap like the paper did
-                eff = load
-                if proto == "phost" and load > 0.7:
-                    eff = 0.7
-                r = sim_run(workload=w, protocol=proto, load=eff)
+            pts = _fig12_points(proto, w, full)
+            for pt, r in zip(pts, sim_sweep(pts, protocol=proto)):
                 for sz, p99, p50 in zip(r["p99_by_size"]["sizes"],
                                         r["p99_by_size"]["p"],
                                         r["p99_by_size"]["median"]):
-                    rows.append(dict(workload=w, protocol=proto, load=eff,
+                    rows.append(dict(workload=w, protocol=proto,
+                                     load=pt["load"],
                                      size_bytes=round(sz),
                                      p99_slowdown=round(p99, 2),
                                      p50_slowdown=round(p50, 2)))
@@ -44,8 +57,7 @@ def fig13_median(full: bool = False):
     rows = []
     for w in workloads:
         for proto in protos:
-            eff = 0.7 if proto == "phost" else 0.8
-            r = sim_run(workload=w, protocol=proto, load=eff)
+            r = sim_sweep(_fig12_points(proto, w, full), protocol=proto)[0]
             rows.append(dict(workload=w, protocol=proto,
                              p50_small=r["p50_small"],
                              p50_all=r["p50_all"]))
@@ -60,17 +72,16 @@ def fig15_utilization(full: bool = False):
     which holds for W1-W3 at default scale (W4/W5's multi-MB messages need
     windows ~10x longer — full mode only; see EXPERIMENTS notes)."""
     workloads = ["W1", "W2", "W3", "W4", "W5"] if full else ["W3"]
-    protos = PROTOS
     loads = ([0.55, 0.65, 0.75, 0.85, 0.92] if full
              else [0.7, 0.8, 0.9])
     rows = []
     for w in workloads:
-        for proto in protos:
+        for proto in PROTOS:
+            pts = [dict(workload=w, load=ld) for ld in loads]
             best = 0.0
-            for load in loads:
-                r = sim_run(workload=w, protocol=proto, load=load)
+            for pt, r in zip(pts, sim_sweep(pts, protocol=proto)):
                 if r["completion_rate"] >= 0.95 and r["lost_chunks"] == 0:
-                    best = load
+                    best = pt["load"]
             rows.append(dict(workload=w, protocol=proto,
                              max_sustainable_load=best))
     emit("fig15_utilization", rows)
@@ -83,10 +94,10 @@ def fig16_wasted_bandwidth(full: bool = False):
     loads = [0.5, 0.6, 0.7, 0.8, 0.9] if full else [0.6, 0.8, 0.9]
     rows = []
     for k in ([1, 2, 4, 7] if full else [1, 7]):
-        for load in loads:
-            r = sim_run(workload="W4", protocol="homa", load=load,
-                        overcommit=k, n_messages=1500)
-            rows.append(dict(overcommit=k, load=load,
+        pts = [dict(workload="W4", load=ld) for ld in loads]
+        for pt, r in zip(pts, sim_sweep(pts, protocol="homa", overcommit=k,
+                                        n_messages=1500)):
+            rows.append(dict(overcommit=k, load=pt["load"],
                              wasted_frac=round(r["wasted_frac"], 4),
                              busy_frac=round(r["busy_frac"], 4),
                              completion=round(r["completion_rate"], 3)))
@@ -96,16 +107,17 @@ def fig16_wasted_bandwidth(full: bool = False):
 
 def fig17_unsched_prios(full: bool = False):
     """W1: slowdown vs number of unscheduled priority levels (1 sched)."""
-    rows = []
+    from repro.core.workloads import sample_sizes
+    from repro.core.priorities import allocate_priorities
     levels = [1, 2, 4, 7] if full else [1, 2, 7]
+    sizes = sample_sizes("W1", 20_000, np.random.default_rng(0))
+    pts = []
     for nu in levels:
-        from repro.core.workloads import sample_sizes
-        from repro.core.priorities import allocate_priorities
-        sizes = sample_sizes("W1", 20_000, np.random.default_rng(0))
-        al = allocate_priorities(sizes, unsched_limit=9728,
-                                 force_unsched=nu)
-        r = sim_run(workload="W1", protocol="homa", load=0.8, overcommit=1,
-                    alloc={"n_unsched": nu, "cutoffs": list(al.cutoffs)})
+        al = allocate_priorities(sizes, unsched_limit=9728, force_unsched=nu)
+        pts.append(dict(workload="W1", load=0.8,
+                        alloc={"n_unsched": nu, "cutoffs": list(al.cutoffs)}))
+    rows = []
+    for nu, r in zip(levels, sim_sweep(pts, protocol="homa", overcommit=1)):
         rows.append(dict(n_unsched=nu, p99_small=r["p99_small"],
                          p99_all=r["p99_all"], p50_all=r["p50_all"]))
     emit("fig17_unsched_prios", rows)
@@ -114,11 +126,11 @@ def fig17_unsched_prios(full: bool = False):
 
 def fig18_cutoffs(full: bool = False):
     """W3, 2 unscheduled levels: sweep the cutoff point."""
+    cutoffs = [200, 1000, 1930, 4000, 8000] if full else [200, 1930, 8000]
+    pts = [dict(workload="W3", load=0.8,
+                alloc={"n_unsched": 2, "cutoffs": [c]}) for c in cutoffs]
     rows = []
-    for cutoff in ([200, 1000, 1930, 4000, 8000] if full
-                   else [200, 1930, 8000]):
-        r = sim_run(workload="W3", protocol="homa", load=0.8,
-                    alloc={"n_unsched": 2, "cutoffs": [cutoff]})
+    for cutoff, r in zip(cutoffs, sim_sweep(pts, protocol="homa")):
         rows.append(dict(cutoff=cutoff, p99_small=r["p99_small"],
                          p99_all=r["p99_all"]))
     emit("fig18_cutoffs", rows)
@@ -127,7 +139,8 @@ def fig18_cutoffs(full: bool = False):
 
 def fig19_sched_prios(full: bool = False):
     """W4: slowdown + sustainable load vs number of scheduled priorities
-    (1 unscheduled level)."""
+    (1 unscheduled level). Overcommit is a compile-time parameter, so each
+    point is its own sim_run."""
     rows = []
     for k in ([1, 2, 4, 7] if full else [1, 4, 7]):
         r = sim_run(workload="W4", protocol="homa", load=0.8, overcommit=k,
@@ -141,10 +154,11 @@ def fig19_sched_prios(full: bool = False):
 
 def fig20_unsched_bytes(full: bool = False):
     """W4: slowdown vs per-message unscheduled byte limit."""
+    uls = [1000, 4864, 9728, 19456] if full else [1000, 9728, 19456]
+    pts = [dict(workload="W4", load=0.8, unsched_limit_bytes=ul)
+           for ul in uls]
     rows = []
-    for ul in ([1000, 4864, 9728, 19456] if full else [1000, 9728, 19456]):
-        r = sim_run(workload="W4", protocol="homa", load=0.8,
-                    unsched_limit_bytes=ul)
+    for ul, r in zip(uls, sim_sweep(pts, protocol="homa")):
         rows.append(dict(unsched_limit=ul, p99_small=r["p99_small"],
                          p99_all=r["p99_all"]))
     emit("fig20_unsched_bytes", rows)
@@ -153,12 +167,13 @@ def fig20_unsched_bytes(full: bool = False):
 
 def fig21_prio_usage(full: bool = False):
     """W3: bytes per priority level at different loads."""
+    loads = [0.5, 0.8, 0.9] if full else [0.5, 0.8]
+    pts = [dict(workload="W3", load=ld) for ld in loads]
     rows = []
-    for load in ([0.5, 0.8, 0.9] if full else [0.5, 0.8]):
-        r = sim_run(workload="W3", protocol="homa", load=load)
+    for pt, r in zip(pts, sim_sweep(pts, protocol="homa")):
         total = max(sum(r["prio_drained_bytes"]), 1)
         for p, b in enumerate(r["prio_drained_bytes"]):
-            rows.append(dict(load=load, prio=p, bytes=b,
+            rows.append(dict(load=pt["load"], prio=p, bytes=b,
                              frac=round(b / total, 4)))
     emit("fig21_prio_usage", rows)
     return rows
@@ -168,9 +183,11 @@ def table1_queues(full: bool = False):
     """TOR->host queue occupancy per workload at 80% load (the simulator
     models downlink queues; core queues are folded into the fixed delay,
     Table 1 shows they are tiny)."""
+    workloads = ["W1", "W2", "W3", "W4", "W5"] if full \
+        else ["W1", "W3", "W5"]
+    pts = [dict(workload=w, load=0.8) for w in workloads]
     rows = []
-    for w in (["W1", "W2", "W3", "W4", "W5"] if full else ["W1", "W3", "W5"]):
-        r = sim_run(workload=w, protocol="homa", load=0.8)
+    for w, r in zip(workloads, sim_sweep(pts, protocol="homa")):
         rows.append(dict(workload=w,
                          q_mean_kb=round(r["q_mean_bytes"] / 1e3, 1),
                          q_max_kb=round(r["q_max_bytes"] / 1e3, 1),
@@ -181,31 +198,31 @@ def table1_queues(full: bool = False):
 
 def fig10_incast(full: bool = False):
     """Incast: N concurrent ~RTTbytes responses to one receiver, with and
-    without the incast-control unscheduled limit."""
-    from repro.core.sim import SimConfig, run_sim
+    without the incast-control unscheduled limit. Both variants of each N
+    share one ``run_sweep`` trace (per-table unsched limits)."""
+    from repro.core.sim import SimConfig, run_sweep
     from repro.core.workloads import MessageTable
     rows = []
     for n in ([50, 150, 400, 1000] if full else [50, 300]):
-        for control in (False, True):
-            nh = 8
-            src = (np.arange(n) % (nh - 1) + 1).astype(np.int32)
-            tbl = MessageTable(src, np.zeros(n, np.int32),
-                               np.full(n, 9728, np.int64),
-                               np.zeros(n, np.int32), "incast", 0.0, 256)
-            cfg = SimConfig(n_hosts=nh, protocol="homa",
-                            max_slots=min(n * 60 + 4000, 120_000),
-                            ring_cap=1024)
-            ul = 512 if control else None
-            stats = run_sim(cfg, tbl, unsched_limit_bytes=ul)
-            done = stats["done"]
-            tput = (stats["size_bytes"][done].sum() * 8 /
-                    ((stats["completion"][done].max() + 1) * 256 * 0.8)
+        nh = 8
+        src = (np.arange(n) % (nh - 1) + 1).astype(np.int32)
+        tbl = MessageTable(src, np.zeros(n, np.int32),
+                           np.full(n, 9728, np.int64),
+                           np.zeros(n, np.int32), "incast", 0.0, 256)
+        cfg = SimConfig(n_hosts=nh, protocol="homa",
+                        max_slots=min(n * 60 + 4000, 120_000),
+                        ring_cap=1024)
+        res = run_sweep(cfg, [tbl, tbl], unsched_limit_bytes=[None, 512])
+        for control, stats in zip((False, True), res):
+            done = stats.done
+            tput = (stats.size_bytes[done].sum() * 8 /
+                    ((stats.completion[done].max() + 1) * 256 * 0.8)
                     if done.any() else 0)   # Gbps at 10G line rate
             rows.append(dict(n_rpcs=n, incast_control=control,
                              completed=int(done.sum()),
-                             lost_chunks=stats["lost_chunks"],
+                             lost_chunks=stats.lost_chunks,
                              q_max_kb=round(float(
-                                 stats["q_max_bytes"].max()) / 1e3, 1),
+                                 stats.q_max_bytes.max()) / 1e3, 1),
                              rel_throughput=round(float(tput) / 10, 3)))
     emit("fig10_incast", rows)
     return rows
@@ -215,7 +232,8 @@ def fig14_preemption_lag(full: bool = False):
     """The paper attributes Homa's residual tail to link-level preemption
     lag. The slotted model reproduces this structurally: finer slots =
     finer-grained link preemption. Sweep slot size; the short-message tail
-    should shrink as preemption granularity improves."""
+    should shrink as preemption granularity improves. (Slot size changes
+    the compile-time config, so these stay individual sim_runs.)"""
     rows = []
     for slot in ([1538, 512, 256, 128] if full else [1538, 256]):
         r = sim_run(workload="W3", protocol="homa", load=0.8,

@@ -22,8 +22,10 @@ def main() -> None:
 
     from benchmarks import paper_figs as F
     from benchmarks import collective_sched as C
+    from benchmarks.sweep_speed import sweep_speed
 
     harnesses = {
+        "sweep_speed": sweep_speed,
         "fig10_incast": F.fig10_incast,
         "fig12_slowdown": F.fig12_slowdown,
         "fig13_median": F.fig13_median,

@@ -1,0 +1,57 @@
+"""run_sweep vs sequential run_sim: the batched-runner acceptance check.
+
+Replays the legacy benchmark pattern — one Python-loop ``run_sim`` call
+per (protocol, workload, load, seed) point, each with its own per-point
+``max_slots`` and therefore its own jit trace — against ``run_sweep``,
+which stacks the same 8 seeds behind ONE jit trace (shared horizon,
+shared workload-level priority allocation).
+
+Emits ``sweep_speed.json`` with both wall times; the acceptance criterion
+is ratio < 0.5 on an 8-seed homa sweep.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit
+
+N_SEEDS = 8
+
+
+def sweep_speed(full: bool = False, *, workload: str = "W1",
+                load: float = 0.8, n_messages: int | None = None,
+                protocol: str = "homa"):
+    from repro.core.sim import SimConfig, run_sim, run_sweep
+    from repro.core.workloads import make_messages
+
+    n_messages = n_messages or (1000 if full else 300)
+    margin = 2000 if full else 600
+    tables = [make_messages(workload, n_hosts=8, load=load,
+                            n_messages=n_messages, slot_bytes=256, seed=s)
+              for s in range(N_SEEDS)]
+
+    # legacy: per-point config -> per-point trace (what paper_figs.py did
+    # for every point before sim_sweep existed)
+    t0 = time.perf_counter()
+    seq = []
+    for t in tables:
+        cfg = SimConfig(n_hosts=8, protocol=protocol, ring_cap=256,
+                        max_slots=int(t.arrival_slot.max()) + margin)
+        seq.append(run_sim(cfg, t))
+    seq_s = time.perf_counter() - t0
+
+    horizon = max(int(t.arrival_slot.max()) for t in tables) + margin
+    cfg = SimConfig(n_hosts=8, protocol=protocol, ring_cap=256,
+                    max_slots=horizon)
+    t0 = time.perf_counter()
+    res = run_sweep(cfg, tables, shared_alloc=True)
+    sweep_s = time.perf_counter() - t0
+
+    rows = [dict(protocol=protocol, workload=workload, load=load,
+                 n_seeds=N_SEEDS, n_messages=n_messages,
+                 sequential_s=round(seq_s, 3), sweep_s=round(sweep_s, 3),
+                 ratio=round(sweep_s / seq_s, 3),
+                 seq_complete=sum(r["n_complete"] for r in seq),
+                 sweep_complete=sum(r.n_complete for r in res))]
+    emit("sweep_speed", rows)
+    return rows

@@ -16,7 +16,27 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
-from repro.launch import train
+
+def sim_quickstart():
+    """30-second tour of the transport-policy API: one structured run,
+    then a 4-seed sweep batched behind a single jit trace."""
+    from repro.core import (SimConfig, simulate, run_sweep,
+                            registered_protocols, make_messages)
+
+    print(f"registered protocols: {', '.join(registered_protocols())}")
+    tbl = make_messages("W1", n_hosts=4, load=0.7, n_messages=200,
+                        slot_bytes=256, seed=0)
+    cfg = SimConfig(protocol="homa", n_hosts=4, max_slots=2000, ring_cap=256)
+    res = simulate(cfg, tbl)                       # -> SimResult
+    print(f"homa: {res.n_complete}/{res.n_messages} complete, "
+          f"p99 slowdown {res.percentile(99):.2f}, "
+          f"downlink busy {float(res.busy_frac.mean()):.2%}")
+
+    sweep = run_sweep(cfg, seeds=[0, 1, 2, 3], workload="W1", load=0.7,
+                      n_messages=200, shared_alloc=True)
+    p99s = [r.percentile(99) for r in sweep]
+    print(f"4-seed sweep (one jit trace): p99 = "
+          f"{', '.join(f'{p:.2f}' for p in p99s)}")
 
 
 def main():
@@ -25,6 +45,9 @@ def main():
     ap.add_argument("--steps", type=int, default=120)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_quickstart")
     a = ap.parse_args()
+
+    sim_quickstart()
+    from repro.launch import train   # deferred: needs the training deps
 
     argv = ["--arch", "mamba2-130m", "--steps", str(a.steps),
             "--seq-len", "128" if not a.full else "1024",

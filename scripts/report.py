@@ -97,6 +97,13 @@ def paper_validation():
                      "finer slots -> lower tail (Fig 14 analogue)",
                      "; ".join(f"{r['slot_bytes']}B: {r['p99_small']:.2f}"
                                for r in f14)))
+    sw = j("sweep_speed.json")
+    if sw:
+        rows.append(("run_sweep vs sequential run_sim (8 seeds)",
+                     "< 0.5x wall time, one jit trace",
+                     "; ".join(f"{r['protocol']}/{r['workload']}: "
+                               f"{r['sweep_s']}s vs {r['sequential_s']}s "
+                               f"({r['ratio']}x)" for r in sw)))
     cs = j("collective_predicted.json")
     if cs:
         rows.append(("Grad-sync predicted (SRPT senders)",

@@ -1,3 +1,19 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+from repro.core.sim import (SimConfig, SimResult, simulate, run_sweep,
+                            run_sim, slowdown_percentiles)
+from repro.core.protocols import (Protocol, SenderPolicy, ReceiverPolicy,
+                                  register, get_protocol,
+                                  registered_protocols)
+from repro.core.workloads import MessageTable, make_messages
+from repro.core.priorities import PriorityAllocation, allocate_priorities
+
+__all__ = [
+    "SimConfig", "SimResult", "simulate", "run_sweep", "run_sim",
+    "slowdown_percentiles",
+    "Protocol", "SenderPolicy", "ReceiverPolicy", "register",
+    "get_protocol", "registered_protocols",
+    "MessageTable", "make_messages",
+    "PriorityAllocation", "allocate_priorities",
+]

@@ -1,0 +1,153 @@
+"""Structured simulation results.
+
+``run_sim`` historically returned a raw dict; :class:`SimResult` makes the
+quantities every consumer recomputed by hand — slowdown percentiles,
+utilization, queue stats, priority usage — first-class fields and methods,
+with :meth:`SimResult.to_json` providing the JSON-safe summary the
+benchmark cache stores.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any
+
+import numpy as np
+
+
+def bucketed_percentiles(size_bytes: np.ndarray, slowdown: np.ndarray,
+                         done: np.ndarray, pct: float = 99.0,
+                         n_buckets: int = 10) -> dict:
+    """Percentile slowdown bucketed by message size (paper Figs. 8/12)."""
+    ok = done & np.isfinite(slowdown)
+    sizes = size_bytes[ok]
+    sl = slowdown[ok]
+    if len(sizes) == 0:
+        return {"sizes": [], "p": [], "median": []}
+    order = np.argsort(sizes)
+    sizes, sl = sizes[order], sl[order]
+    edges = np.linspace(0, len(sizes), n_buckets + 1).astype(int)
+    out = {"sizes": [], "p": [], "median": [], "count": []}
+    for i in range(n_buckets):
+        lo, hi = edges[i], edges[i + 1]
+        if hi <= lo:
+            continue
+        out["sizes"].append(float(np.median(sizes[lo:hi])))
+        out["p"].append(float(np.percentile(sl[lo:hi], pct)))
+        out["median"].append(float(np.percentile(sl[lo:hi], 50)))
+        out["count"].append(int(hi - lo))
+    return out
+
+
+@dataclasses.dataclass
+class SimResult:
+    """One simulation run, post-processed to numpy.
+
+    Per-message arrays are aligned with the input ``MessageTable``;
+    per-host arrays have shape ``(n_hosts,)``.
+    """
+    protocol: str
+    alloc: Any                       # PriorityAllocation
+    # per-message
+    completion: np.ndarray           # slot of completion, -1 if unfinished
+    elapsed: np.ndarray              # completion - arrival + 1, -1 if unfin.
+    ideal: np.ndarray                # unloaded transmission time (slots)
+    slowdown: np.ndarray             # elapsed / ideal, NaN if unfinished
+    done: np.ndarray                 # bool
+    size_slots: np.ndarray
+    size_bytes: np.ndarray
+    # per-host utilization
+    busy_frac: np.ndarray            # downlink busy fraction
+    wasted_frac: np.ndarray          # idle-but-withheld fraction (Fig. 16)
+    uplink_busy_frac: np.ndarray
+    # queue + priority stats
+    q_mean_bytes: np.ndarray
+    q_max_bytes: np.ndarray
+    prio_drained_bytes: np.ndarray   # (n_prios,) bytes drained per level
+    # scalars
+    lost_chunks: int
+    n_complete: int
+    n_messages: int
+    # optional raw scan state (return_state=True)
+    state: dict | None = None
+    static: dict | None = None
+
+    # ------------------------------------------------------------ derived
+
+    @property
+    def completion_rate(self) -> float:
+        return float(self.done.mean()) if self.n_messages else 0.0
+
+    def steady_mask(self, warmup_frac: float = 0.1) -> np.ndarray:
+        """Completion mask with the first ``warmup_frac`` of arrivals
+        dropped (steady-state window)."""
+        ok = self.done.copy()
+        ok[:int(self.n_messages * warmup_frac)] = False
+        return ok
+
+    def percentile(self, q: float, mask: np.ndarray | None = None
+                   ) -> float | None:
+        """Slowdown percentile over ``mask`` (default: completed msgs)."""
+        m = self.done if mask is None else mask
+        m = m & np.isfinite(self.slowdown)
+        if m.sum() == 0:
+            return None
+        return float(np.percentile(self.slowdown[m], q))
+
+    def percentiles_by_size(self, pct: float = 99.0, n_buckets: int = 10,
+                            mask: np.ndarray | None = None) -> dict:
+        return bucketed_percentiles(
+            self.size_bytes, self.slowdown,
+            self.done if mask is None else mask, pct, n_buckets)
+
+    # ------------------------------------------------------- serialization
+
+    def summary(self, *, warmup_frac: float = 0.1, small_bytes: int = 1000,
+                pct: float = 99.0) -> dict:
+        """JSON-safe aggregate summary (the benchmark-cache schema)."""
+        ok = self.steady_mask(warmup_frac)
+        small = ok & (self.size_bytes < small_bytes)
+        return {
+            "protocol": self.protocol,
+            "n_complete": int(self.n_complete),
+            "n_messages": int(self.n_messages),
+            "completion_rate": self.completion_rate,
+            "p99_by_size": self.percentiles_by_size(pct, mask=ok),
+            "busy_frac": float(np.mean(self.busy_frac)),
+            "wasted_frac": float(np.mean(self.wasted_frac)),
+            "uplink_busy_frac": float(np.mean(self.uplink_busy_frac)),
+            "q_mean_bytes": float(np.mean(self.q_mean_bytes)),
+            "q_max_bytes": float(np.max(self.q_max_bytes)),
+            "prio_drained_bytes": [int(x) for x in self.prio_drained_bytes],
+            "lost_chunks": int(self.lost_chunks),
+            "alloc": {"n_unsched": self.alloc.n_unsched,
+                      "cutoffs": list(self.alloc.cutoffs),
+                      "unsched_frac": self.alloc.unsched_bytes_frac},
+            "p99_small": self.percentile(pct, small),
+            "p50_small": self.percentile(50, small),
+            "p99_all": self.percentile(pct, ok),
+            "p50_all": self.percentile(50, ok),
+        }
+
+    def to_json(self, **kwargs) -> str:
+        return json.dumps(self.summary(**kwargs))
+
+    def to_legacy_dict(self) -> dict:
+        """The exact dict schema returned by the original ``run_sim``."""
+        out = {
+            "alloc": self.alloc,
+            "completion": self.completion, "elapsed": self.elapsed,
+            "ideal": self.ideal, "slowdown": self.slowdown, "done": self.done,
+            "size_slots": self.size_slots, "size_bytes": self.size_bytes,
+            "busy_frac": self.busy_frac, "wasted_frac": self.wasted_frac,
+            "uplink_busy_frac": self.uplink_busy_frac,
+            "q_mean_bytes": self.q_mean_bytes,
+            "q_max_bytes": self.q_max_bytes,
+            "prio_drained_bytes": self.prio_drained_bytes,
+            "lost_chunks": self.lost_chunks,
+            "n_complete": self.n_complete, "n_messages": self.n_messages,
+        }
+        if self.state is not None:
+            out["state"] = self.state
+            out["static"] = self.static
+        return out

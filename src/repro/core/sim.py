@@ -3,23 +3,34 @@
 Faithful reproduction of Homa's mechanisms (paper §3) plus the comparison
 protocols, as one ``lax.scan`` over link-time slots:
 
-  senders     SRPT over sendable messages, blind until RTTbytes, then
-              grant-clocked; per-chunk priorities (receiver-assigned)
+  senders     chunk order + priority stamping from the protocol's
+              ``SenderPolicy`` (SRPT for Homa), blind until RTTbytes,
+              then grant-clocked
   network     fixed delay (queueing modeled at downlinks, per paper §2.2)
   downlinks   8-level priority FIFOs per receiver (the TOR egress port);
               one slot drained per tick; exact priority-then-FIFO arbitration
-  receivers   grants with controlled overcommitment (top-K SRPT, K = number
-              of scheduled priority levels), dynamic scheduled priorities
-              (lowest-levels-first to kill preemption lag, §3.4/Fig. 5),
-              delayed visibility at senders (grant RTT)
+  receivers   grants + scheduled-priority assignment + overcommit degree
+              from the protocol's ``ReceiverPolicy`` (Homa: top-K SRPT with
+              controlled overcommitment, dynamic scheduled priorities
+              lowest-levels-first, §3.4/Fig. 5), delayed visibility at
+              senders (grant RTT)
 
 Time unit: one slot = ``slot_bytes`` of link time (default 256 B ~ 205 ns at
 10 Gbps; rtt_slots=38 -> RTTbytes ~ 9.7 KB as in the paper). All sizes are
 tracked in slots; the final partial packet of a message occupies a full slot
 (packetization overhead).
 
-Protocols: homa | basic | phost | pias | pfabric | ndp  (see DESIGN.md for
-the approximations in each baseline).
+Protocols are pluggable policies (``repro.core.protocols``, DESIGN.md §1):
+homa | basic | phost | pias | pfabric | ndp are registered out of the box
+(see DESIGN.md §3 for the approximations in each baseline). ``step_fn`` is
+policy-agnostic orchestration — it never inspects the protocol name.
+
+Entry points:
+
+  ``simulate(cfg, table)``    one run -> :class:`SimResult`
+  ``run_sweep(cfg, tables)``  N independent runs vmapped inside ONE jit
+                              trace (multi-seed / multi-load sweeps)
+  ``run_sim(cfg, table)``     legacy dict-returning compatibility shim
 """
 from __future__ import annotations
 
@@ -31,14 +42,13 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from repro.core.workloads import MessageTable
+from repro.core.workloads import MessageTable, make_messages
 from repro.core.priorities import PriorityAllocation, allocate_priorities, \
     pias_thresholds
-
-I32 = jnp.int32
-BIG = jnp.int32(2 ** 30)
-MSG_BITS = 13
-MSG_MOD = 1 << MSG_BITS          # max messages per sim
+from repro.core.protocols import (Protocol, get_protocol,
+                                  registered_protocols, MSG_BITS, MSG_MOD,
+                                  BIG, I32)
+from repro.core.results import SimResult, bucketed_percentiles
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,6 +65,9 @@ class SimConfig:
     phost_timeout_slots: int = 114      # ~3 RTT
     max_slots: int = 20_000
 
+    def __post_init__(self):
+        get_protocol(self.protocol)     # ValueError on unknown protocol
+
     @property
     def rtt_bytes(self) -> int:
         return self.rtt_slots * self.slot_bytes
@@ -68,6 +81,7 @@ def prepare(cfg: SimConfig, table: MessageTable,
             alloc: PriorityAllocation | None = None,
             unsched_limit_bytes: int | np.ndarray | None = None):
     """Static per-message arrays for the scan."""
+    proto = get_protocol(cfg.protocol)
     M = len(table.size)
     assert M <= MSG_MOD, f"max {MSG_MOD} messages"
     assert cfg.max_slots < 2 ** 21
@@ -77,19 +91,10 @@ def prepare(cfg: SimConfig, table: MessageTable,
         alloc = allocate_priorities(table.size, unsched_limit=cfg.rtt_bytes,
                                     n_prios=cfg.n_prios)
 
-    if unsched_limit_bytes is None:
-        unsched_limit_bytes = cfg.rtt_bytes
-    ul = np.broadcast_to(np.asarray(unsched_limit_bytes), (M,))
-    if cfg.protocol in ("pias", "pfabric"):
-        ul = np.full((M,), cfg.rtt_bytes)       # blind first window
+    ul = proto.unsched_limit(cfg, M, unsched_limit_bytes)
     unsched_slots = np.minimum(_to_slots(ul, cfg.slot_bytes), size_slots)
+    up = proto.unsched_prio(cfg, table.size, alloc)
 
-    if cfg.protocol == "homa":
-        up = alloc.unsched_prio(table.size)
-    elif cfg.protocol in ("phost", "ndp"):
-        up = np.full((M,), cfg.n_prios - 1)     # one static unsched level
-    else:                                        # basic / pias / pfabric
-        up = np.zeros((M,))
     # PIAS: sender-side MLFQ demotion thresholds (slots of bytes sent)
     pias_cut = pias_thresholds(table.size, cfg.n_prios)
     pias_cut_slots = _to_slots(np.asarray(pias_cut + [1 << 40]),
@@ -111,25 +116,23 @@ def prepare(cfg: SimConfig, table: MessageTable,
     return static, alloc
 
 
-def _init_state(cfg: SimConfig, M: int):
+def _init_state(cfg: SimConfig, proto: Protocol, M: int):
     H, cap, Dg = cfg.n_hosts, cfg.ring_cap, cfg.grant_delay_slots
     z = functools.partial(jnp.zeros, dtype=I32)
     return {
+        **proto.extra_state(cfg, M),          # protocol-private carry
         "sent": z((M,)),
         "granted_s": z((M,)),                 # sender-visible grant (slots)
         "grant_r": z((M,)),                   # receiver-issued grant (slots)
         "recv": z((M,)),
         "sched_prio": z((M,)),
         "completion": jnp.full((M,), -1, I32),
-        "stall_until": z((M,)),               # phost timeout blacklist
-        "last_progress": z((M,)),
-        "last_served": z((M,)),               # ndp fair share
-        "last_sent": z((M,)),                 # pias sender fair share
-        # downlink rings
+        # downlink rings; a chunk's network-arrival time is r_seq +
+        # net_delay_slots (enqueue time plus the fixed network delay), so
+        # no separate r_time array is carried
         "r_msg": jnp.full((H, cap), -1, I32),
         "r_prio": jnp.full((H, cap), BIG, I32),   # smaller = served first
         "r_seq": jnp.full((H, cap), BIG, I32),
-        "r_time": jnp.full((H, cap), BIG, I32),
         "r_valid": jnp.zeros((H, cap), bool),
         # delayed receiver state (grant/prio propagation)
         "hist_grant": z((Dg, M)),
@@ -142,82 +145,13 @@ def _init_state(cfg: SimConfig, M: int):
     }
 
 
-def _receiver_grants(cfg: SimConfig, st, S, now, n_sched: int):
-    """Compute receiver-side grants + scheduled priorities for this slot.
-    Returns (grant_r, sched_prio, active_mask, withheld_exists (H,))."""
-    size, dst_oh = S["size"], S["dst_onehot"]
-    known = (st["recv"] > 0) & (st["completion"] < 0)
-    remaining = jnp.maximum(size - st["recv"], 0)
-    proto = cfg.protocol
-
-    if proto in ("basic", "ndp"):
-        grant_r = jnp.where(known, jnp.minimum(size, st["recv"] + cfg.rtt_slots),
-                            st["grant_r"])
-        grant_r = jnp.maximum(grant_r, st["grant_r"])
-        return grant_r, jnp.zeros_like(st["sched_prio"]), known, \
-            jnp.zeros((cfg.n_hosts,), bool)
-
-    if proto in ("pias", "pfabric"):
-        arrived = S["arrival"] <= now
-        grant_r = jnp.where(arrived & (st["completion"] < 0),
-                            jnp.minimum(size, st["recv"] + cfg.rtt_slots),
-                            st["grant_r"])
-        grant_r = jnp.maximum(grant_r, st["grant_r"])
-        return grant_r, jnp.zeros_like(st["sched_prio"]), arrived, \
-            jnp.zeros((cfg.n_hosts,), bool)
-
-    # homa / phost: top-K SRPT per receiver
-    K = 1 if proto == "phost" else (cfg.overcommit or max(n_sched, 1))
-    K = min(K, size.shape[0])        # can't select more than M messages
-    eligible = known
-    if proto == "phost":
-        eligible = eligible & (st["stall_until"] <= now)
-    # encode (remaining, msg) so top_k recovers both; smaller remaining wins.
-    # Ties break toward the SMALLEST msg id: a stable active set is what
-    # gives SRPT its run-to-completion behaviour — an unstable tie-break
-    # churns the active message and leaks grants to every tied message
-    # (catastrophic under incast, where all messages are the same size).
-    keyval = ((jnp.int32(1 << 17) - jnp.minimum(remaining, (1 << 17) - 1))
-              << MSG_BITS) | (MSG_MOD - 1 - S["msg_ids"])
-    mat = jnp.where(dst_oh & eligible[None, :], keyval[None, :], 0)  # (H, M)
-    vals, _ = lax.top_k(mat, K)                                      # (H, K)
-    valid = vals > 0
-    msgs = jnp.where(valid, MSG_MOD - 1 - (vals & (MSG_MOD - 1)),
-                     MSG_MOD)                                        # sentinel
-    n_active = valid.sum(axis=1)                                     # (H,)
-    # scheduled priority: rank r (0 = fewest remaining) among A active gets
-    # level (A-1-r): lowest levels used first, shortest on top (paper §3.4)
-    ranks = jnp.arange(K)[None, :]
-    prio = jnp.clip(n_active[:, None] - 1 - ranks, 0, max(n_sched - 1, 0))
-
-    flat_msgs = msgs.reshape(-1)
-    new_grant = jnp.minimum(size, st["recv"] + cfg.rtt_slots)
-    grant_r = st["grant_r"]
-    grant_r = grant_r.at[flat_msgs].max(
-        jnp.where(valid.reshape(-1), new_grant[
-            jnp.minimum(flat_msgs, len(size) - 1)], 0), mode="drop")
-    sched_prio = st["sched_prio"].at[flat_msgs].set(
-        prio.reshape(-1), mode="drop")
-
-    active = jnp.zeros_like(known).at[flat_msgs].set(
-        valid.reshape(-1), mode="drop")
-    withheld = (dst_oh & eligible[None, :] & ~active[None, :]).any(axis=1)
-    return grant_r, sched_prio, active, withheld
-
-
-def _sender_select(cfg: SimConfig, st, S, now):
-    """Pick one message per host (SRPT or FIFO), return (chosen (H,), prio)."""
+def _sender_select(cfg: SimConfig, proto: Protocol, st, S, now):
+    """Pick one message per host by the sender policy's order key."""
     size, src = S["size"], S["src"]
     arrived = S["arrival"] <= now
     sendable = arrived & (st["sent"] < st["granted_s"]) & (st["sent"] < size)
     remaining = jnp.maximum(size - st["sent"], 0)
-    if cfg.protocol == "pias":
-        # DCTCP-style hosts approximate per-flow fair sharing: round-robin
-        order = jnp.minimum(st["last_sent"], (1 << 17) - 1)
-    elif cfg.protocol == "ndp":
-        order = jnp.minimum(S["arrival"], (1 << 17) - 1)    # FIFO senders
-    else:
-        order = jnp.minimum(remaining, (1 << 17) - 1)       # SRPT senders
+    order = proto.sender.order(cfg, st, S, now, remaining)
     key = (order << MSG_BITS) | S["msg_ids"]
     key = jnp.where(sendable, key, BIG)
     host_min = jax.ops.segment_min(key, src, num_segments=cfg.n_hosts)
@@ -226,39 +160,14 @@ def _sender_select(cfg: SimConfig, st, S, now):
     return chosen, has
 
 
-def _chunk_prio(cfg: SimConfig, st, S, chosen, n_sched: int):
-    """Priority value for the chunk each host sends (smaller = better)."""
-    M = S["size"].shape[0]
-    cm = jnp.minimum(chosen, M - 1)
-    sent = st["sent"][cm]
-    unsched = sent < S["unsched"][cm]
-    proto = cfg.protocol
-    if proto == "pfabric":
-        # continuous priority: remaining slots
-        return jnp.maximum(S["size"][cm] - sent, 0)
-    if proto == "pias":
-        lvl = jnp.searchsorted(S["pias_cuts"], sent, side="right")
-        return lvl.astype(I32)                       # level 0 first, demoted up
-    if proto in ("basic",):
-        return jnp.zeros_like(cm)
-    if proto == "ndp":
-        return jnp.where(unsched, 0, 1).astype(I32)  # 2 static levels
-    if proto == "phost":
-        return jnp.where(unsched, 0, 1).astype(I32)
-    # homa: receiver-allocated
-    up = (cfg.n_prios - 1 - S["uprio"][cm])          # inverted: smaller=better
-    sp = (n_sched - 1 - st["sched_prio"][cm]) + 0    # within scheduled band
-    sched_inv = (cfg.n_prios - n_sched) + sp         # scheduled below unsched
-    # unscheduled levels sit above (smaller inv value) all scheduled levels
-    return jnp.where(unsched, up, sched_inv).astype(I32)
-
-
-def step_fn(cfg: SimConfig, S, n_sched: int, st, now):
+def step_fn(cfg: SimConfig, proto: Protocol, S, n_sched: int, st, now):
+    """One link-time slot: policy-agnostic orchestration of receivers,
+    uplinks, the network, and the priority-queue downlinks."""
     H, cap, Dg = cfg.n_hosts, cfg.ring_cap, cfg.grant_delay_slots
     M = S["size"].shape[0]
 
-    # ---- 1. receiver logic (current state), store into delay history
-    grant_r, sched_prio, active, withheld = _receiver_grants(
+    # ---- 1. receiver policy (current state), store into delay history
+    grant_r, sched_prio, active, withheld = proto.receiver.grants(
         cfg, st, S, now, n_sched)
     st = {**st, "grant_r": grant_r, "sched_prio": sched_prio}
     hist_grant = st["hist_grant"].at[now % Dg].set(grant_r)
@@ -276,33 +185,33 @@ def step_fn(cfg: SimConfig, S, n_sched: int, st, now):
           "sched_prio": jnp.where(arrived, prio_vis, st["sched_prio"])}
     # NOTE: sender uses delayed sched_prio (the grant packet's priority)
 
-    # ---- 2. senders pick + transmit one chunk
-    chosen, has = _sender_select(cfg, st, S, now)
+    # ---- 2. senders pick + transmit one chunk (sender policy)
+    chosen, has = _sender_select(cfg, proto, st, S, now)
     cm = jnp.minimum(chosen, M - 1)
-    prio_chunk = _chunk_prio(cfg, st, S, chosen, n_sched)
+    unsched_chunk = st["sent"][cm] < S["unsched"][cm]
+    prio_chunk = proto.sender.chunk_prio(cfg, st, S, cm, unsched_chunk,
+                                         n_sched)
     sent = st["sent"].at[cm].add(jnp.where(has, 1, 0), mode="drop")
-    last_sent = st["last_sent"].at[cm].set(
-        jnp.where(has, now, st["last_sent"][cm]), mode="drop")
-    st = {**st, "sent": sent, "last_sent": last_sent,
+    st = {**st, "sent": sent,
           "uplink_busy": st["uplink_busy"] + has.astype(I32)}
+    st = proto.sender.on_send(cfg, st, S, cm, has, now)
 
     # ---- 3. insert chunks into free buffer slots at the destination
     dsts = jnp.where(has, S["dst"][cm], H)                   # sentinel H
     same = (dsts[:, None] == dsts[None, :]) & has[None, :] & has[:, None]
     rank = jnp.sum(same & (jnp.arange(H)[None, :] < jnp.arange(H)[:, None]),
                    axis=1)                                    # rank within dst
-    # r-th free (invalid) slot per dst row: true occupancy-based buffering;
-    # a chunk is dropped only when the buffer is actually full.
-    inv = ~st["r_valid"]                                      # (H, cap)
-    c = jnp.cumsum(inv, axis=1)
-    # pos_table[d, r] = index of the (r+1)-th invalid slot in row d
-    ranks1 = jnp.arange(H)[None, None, :] + 1                 # (1, 1, H)
-    matches = inv[:, :, None] & (c[:, :, None] == ranks1)     # (H, cap, H)
-    pos_table = jnp.argmax(matches, axis=1)                   # (H, H)
-    room = c[:, -1][jnp.minimum(dsts, H - 1)] > rank          # buffer not full
+    # r-th free slot per dst row: true occupancy-based buffering; a chunk
+    # is dropped only when the buffer is actually full. The cumsum of free
+    # slots is nondecreasing, so the (r+1)-th free slot is the first index
+    # where it reaches r+1 — a binary search per sender instead of the
+    # (H, cap, H) match table this used to build every slot.
+    c = jnp.cumsum(~st["r_valid"], axis=1)
+    c_dst = c[jnp.minimum(dsts, H - 1)]                       # (H, cap)
+    room = c_dst[:, -1] > rank                                # buffer not full
     okw = has & room
     lost = st["lost"] + jnp.sum(has & ~room)
-    pos = pos_table[jnp.minimum(dsts, H - 1), rank]
+    pos = jax.vmap(jnp.searchsorted)(c_dst, rank + 1)         # (H,)
     # suppressed writes go out of bounds (mode="drop"): an in-bounds no-op
     # write could race a genuine insertion at the same scatter location
     idx = (jnp.where(okw, dsts, H), jnp.where(okw, pos, 0))
@@ -311,14 +220,12 @@ def step_fn(cfg: SimConfig, S, n_sched: int, st, now):
           "r_prio": st["r_prio"].at[idx].set(prio_chunk, mode="drop"),
           "r_seq": st["r_seq"].at[idx].set(
               jnp.full_like(dsts, now), mode="drop"),
-          "r_time": st["r_time"].at[idx].set(
-              jnp.full_like(dsts, now + cfg.net_delay_slots), mode="drop"),
           "r_valid": st["r_valid"].at[idx].set(
               jnp.ones_like(okw), mode="drop"),
           "lost": lost}
 
     # ---- 4. downlink drain: strict priority, FIFO within level
-    eligible = st["r_valid"] & (st["r_time"] <= now)
+    eligible = st["r_valid"] & (st["r_seq"] + cfg.net_delay_slots <= now)
     prio_eff = jnp.where(eligible, st["r_prio"], BIG)        # (H, cap)
     pmin = prio_eff.min(axis=1)                              # (H,)
     seq_eff = jnp.where(eligible & (st["r_prio"] == pmin[:, None]),
@@ -331,11 +238,7 @@ def step_fn(cfg: SimConfig, S, n_sched: int, st, now):
         jnp.where(any_elig, 1, 0), mode="drop")
     r_valid = st["r_valid"].at[hidx].set(
         jnp.where(any_elig, False, st["r_valid"][hidx]))
-    # ndp fair-share: round-robin via last-served ordering
-    if cfg.protocol == "ndp":
-        ls = st["last_served"].at[jnp.minimum(drained_msg, M - 1)].set(
-            now, mode="drop")
-        st = {**st, "last_served": ls}
+    st = proto.on_drain(cfg, st, S, drained_msg, any_elig, now)
 
     completion = jnp.where((recv >= S["size"]) & (st["completion"] < 0),
                            now, st["completion"])
@@ -356,40 +259,36 @@ def step_fn(cfg: SimConfig, S, n_sched: int, st, now):
           "q_max": jnp.maximum(st["q_max"], qlen),
           "wasted": wasted, "prio_drained": prio_drained}
 
-    # ---- 6. phost timeout: if the single granted message makes no progress
-    # for `timeout` slots, blacklist it briefly so the receiver switches to
-    # another message (approximates pHost's sender-timeout mechanism).
-    if cfg.protocol == "phost":
-        lp = st["last_progress"]
-        lp = jnp.maximum(lp, S["arrival"])            # clock starts at arrival
-        lp = lp.at[jnp.minimum(drained_msg, M - 1)].max(
-            jnp.where(any_elig, now, 0), mode="drop")
-        timed_out = active & (st["grant_r"] > recv) &             (now - lp > cfg.phost_timeout_slots)
-        new_stall = jnp.where(timed_out, now + cfg.phost_timeout_slots,
-                              st["stall_until"])
-        st = {**st, "stall_until": new_stall, "last_progress": lp}
+    # ---- 6. protocol end-of-slot hook (e.g. pHost sender timeouts)
+    st = proto.post_step(cfg, st, S, now, active, drained_msg, any_elig)
 
     return st, None
 
 
-@functools.partial(jax.jit, static_argnums=(0, 3))
-def _run(cfg: SimConfig, S, st0, n_sched: int):
-    body = functools.partial(step_fn, cfg, S, n_sched)
+@functools.partial(jax.jit, static_argnums=(0, 1, 4))
+def _run(cfg: SimConfig, proto: Protocol, S, st0, n_sched: int):
+    body = functools.partial(step_fn, cfg, proto, S, n_sched)
     st, _ = lax.scan(body, st0, jnp.arange(cfg.max_slots, dtype=I32))
     return st
 
 
-def run_sim(cfg: SimConfig, table: MessageTable,
-            alloc: PriorityAllocation | None = None,
-            unsched_limit_bytes=None, return_state: bool = False) -> dict:
-    S, alloc = prepare(cfg, table, alloc, unsched_limit_bytes)
-    n_sched = alloc.n_sched if cfg.protocol == "homa" else \
-        (cfg.overcommit or alloc.n_sched)
-    n_sched = max(n_sched, 1)
-    st0 = _init_state(cfg, len(table.size))
-    st = _run(cfg, S, st0, n_sched)
-    st = jax.tree.map(np.asarray, st)
+@functools.partial(jax.jit, static_argnums=(0, 1, 3))
+def _run_batch(cfg: SimConfig, proto: Protocol, S_stack, n_sched: int):
+    """N independent runs in one trace: vmap over the leading table axis."""
+    M = S_stack["size"].shape[1]
+    st0 = _init_state(cfg, proto, M)
 
+    def one(S):
+        body = functools.partial(step_fn, cfg, proto, S, n_sched)
+        st, _ = lax.scan(body, st0, jnp.arange(cfg.max_slots, dtype=I32))
+        return st
+
+    return jax.vmap(one)(S_stack)
+
+
+def _finalize(cfg: SimConfig, table: MessageTable, S, alloc, st,
+              return_state: bool) -> SimResult:
+    """Numpy post-processing of one run's final scan state."""
     size_slots = np.asarray(S["size"])
     arrival = np.asarray(S["arrival"])
     done = st["completion"] >= 0
@@ -397,42 +296,132 @@ def run_sim(cfg: SimConfig, table: MessageTable,
     ideal = size_slots + cfg.net_delay_slots
     slowdown = np.where(done, elapsed / ideal, np.nan)
 
-    return {
-        "alloc": alloc,
-        "completion": st["completion"], "elapsed": elapsed,
-        "ideal": ideal, "slowdown": slowdown, "done": done,
-        "size_slots": size_slots, "size_bytes": np.asarray(table.size),
-        "busy_frac": st["busy"] / cfg.max_slots,
-        "wasted_frac": st["wasted"] / cfg.max_slots,
-        "uplink_busy_frac": st["uplink_busy"] / cfg.max_slots,
-        "q_mean_bytes": st["q_sum"] / cfg.max_slots * cfg.slot_bytes,
-        "q_max_bytes": st["q_max"] * cfg.slot_bytes,
-        "prio_drained_bytes": st["prio_drained"] * cfg.slot_bytes,
-        "lost_chunks": int(st["lost"]),
-        "n_complete": int(done.sum()), "n_messages": len(size_slots),
-        **({"state": st, "static": jax.tree.map(np.asarray, S)}
-           if return_state else {}),
-    }
+    return SimResult(
+        protocol=cfg.protocol, alloc=alloc,
+        completion=st["completion"], elapsed=elapsed, ideal=ideal,
+        slowdown=slowdown, done=done,
+        size_slots=size_slots, size_bytes=np.asarray(table.size),
+        busy_frac=st["busy"] / cfg.max_slots,
+        wasted_frac=st["wasted"] / cfg.max_slots,
+        uplink_busy_frac=st["uplink_busy"] / cfg.max_slots,
+        q_mean_bytes=st["q_sum"] / cfg.max_slots * cfg.slot_bytes,
+        q_max_bytes=st["q_max"] * cfg.slot_bytes,
+        prio_drained_bytes=st["prio_drained"] * cfg.slot_bytes,
+        lost_chunks=int(st["lost"]),
+        n_complete=int(done.sum()), n_messages=len(size_slots),
+        state=st if return_state else None,
+        static=jax.tree.map(np.asarray, S) if return_state else None,
+    )
 
 
-def slowdown_percentiles(stats: dict, pct: float = 99.0,
+def simulate(cfg: SimConfig, table: MessageTable,
+             alloc: PriorityAllocation | None = None,
+             unsched_limit_bytes=None,
+             return_state: bool = False) -> SimResult:
+    """Run one simulation; returns a structured :class:`SimResult`."""
+    proto = get_protocol(cfg.protocol)
+    S, alloc = prepare(cfg, table, alloc, unsched_limit_bytes)
+    n_sched = proto.n_sched(cfg, alloc)
+    st0 = _init_state(cfg, proto, len(table.size))
+    st = _run(cfg, proto, S, st0, n_sched)
+    st = jax.tree.map(np.asarray, st)
+    return _finalize(cfg, table, S, alloc, st, return_state)
+
+
+def run_sweep(cfg: SimConfig, tables: list[MessageTable] | None = None, *,
+              seeds: list[int] | None = None, workload: str | None = None,
+              load: float | None = None, n_messages: int = 2000,
+              alloc=None, unsched_limit_bytes=None,
+              shared_alloc: bool = False,
+              return_state: bool = False) -> list[SimResult]:
+    """Run N independent simulations batched inside ONE jit trace.
+
+    Either pass ``tables`` (message tables of identical length) or
+    ``seeds`` + ``workload`` + ``load`` to synthesize one table per seed.
+    ``alloc`` and ``unsched_limit_bytes`` may be lists (one entry per
+    table) to sweep priority-allocation ablations (Figs. 17/18/20) over a
+    fixed table. Per-table priority allocations default to exactly what
+    ``simulate`` computes; tables whose allocation yields a different
+    number of scheduled levels (a static scan parameter) are grouped and
+    each group is vmapped in a single compilation. Results are
+    bit-identical to sequential ``simulate`` calls and returned in input
+    order.
+
+    ``shared_alloc=True`` derives ONE priority allocation from the union
+    of all tables' message sizes (the paper's workload-knowledge model,
+    §4) so every run shares the scan's static parameters and the whole
+    sweep compiles exactly once.
+    """
+    if tables is None:
+        if seeds is None or workload is None or load is None:
+            raise ValueError("run_sweep needs `tables` or "
+                             "(`seeds`, `workload`, `load`)")
+        tables = [make_messages(workload, n_hosts=cfg.n_hosts, load=load,
+                                n_messages=n_messages,
+                                slot_bytes=cfg.slot_bytes, seed=s)
+                  for s in seeds]
+    if not tables:
+        return []
+    M0 = len(tables[0].size)
+    if any(len(t.size) != M0 for t in tables):
+        raise ValueError("run_sweep requires tables of identical length "
+                         f"(got {[len(t.size) for t in tables]})")
+
+    proto = get_protocol(cfg.protocol)
+    if shared_alloc and alloc is None:
+        alloc = allocate_priorities(
+            np.concatenate([t.size for t in tables]),
+            unsched_limit=cfg.rtt_bytes, n_prios=cfg.n_prios)
+    N = len(tables)
+    allocs = list(alloc) if isinstance(alloc, (list, tuple)) \
+        else [alloc] * N
+    uls = list(unsched_limit_bytes) \
+        if isinstance(unsched_limit_bytes, (list, tuple)) \
+        else [unsched_limit_bytes] * N
+    if len(allocs) != N or len(uls) != N:
+        raise ValueError("per-table alloc/unsched_limit lists must match "
+                         "the number of tables")
+    prepped = []
+    for t, al_i, ul_i in zip(tables, allocs, uls):
+        S, al = prepare(cfg, t, al_i, ul_i)
+        prepped.append((S, al, proto.n_sched(cfg, al)))
+
+    # group by the static scan parameter; usually one group per sweep
+    groups: dict[int, list[int]] = {}
+    for i, (_, _, ns) in enumerate(prepped):
+        groups.setdefault(ns, []).append(i)
+
+    results: list[SimResult | None] = [None] * len(tables)
+    for n_sched, idxs in groups.items():
+        S_stack = jax.tree.map(lambda *xs: jnp.stack(xs),
+                               *[prepped[i][0] for i in idxs])
+        st_batch = jax.tree.map(np.asarray,
+                                _run_batch(cfg, proto, S_stack, n_sched))
+        for k, i in enumerate(idxs):
+            st_i = jax.tree.map(lambda x: x[k], st_batch)
+            results[i] = _finalize(cfg, tables[i], prepped[i][0],
+                                   prepped[i][1], st_i, return_state)
+    return results
+
+
+def run_sim(cfg: SimConfig, table: MessageTable,
+            alloc: PriorityAllocation | None = None,
+            unsched_limit_bytes=None, return_state: bool = False) -> dict:
+    """Legacy compatibility shim: :func:`simulate` as a raw dict."""
+    return simulate(cfg, table, alloc, unsched_limit_bytes,
+                    return_state).to_legacy_dict()
+
+
+def slowdown_percentiles(stats: dict | SimResult, pct: float = 99.0,
                          n_buckets: int = 10) -> dict:
-    """Percentile slowdown bucketed by message size (paper Figs. 8/12)."""
-    ok = stats["done"] & np.isfinite(stats["slowdown"])
-    sizes = stats["size_bytes"][ok]
-    sl = stats["slowdown"][ok]
-    if len(sizes) == 0:
-        return {"sizes": [], "p": [], "median": []}
-    order = np.argsort(sizes)
-    sizes, sl = sizes[order], sl[order]
-    edges = np.linspace(0, len(sizes), n_buckets + 1).astype(int)
-    out = {"sizes": [], "p": [], "median": [], "count": []}
-    for i in range(n_buckets):
-        lo, hi = edges[i], edges[i + 1]
-        if hi <= lo:
-            continue
-        out["sizes"].append(float(np.median(sizes[lo:hi])))
-        out["p"].append(float(np.percentile(sl[lo:hi], pct)))
-        out["median"].append(float(np.percentile(sl[lo:hi], 50)))
-        out["count"].append(int(hi - lo))
-    return out
+    """Percentile slowdown bucketed by message size (paper Figs. 8/12).
+    Accepts a :class:`SimResult` or the legacy stats dict."""
+    if isinstance(stats, SimResult):
+        return stats.percentiles_by_size(pct, n_buckets)
+    return bucketed_percentiles(stats["size_bytes"], stats["slowdown"],
+                                stats["done"], pct, n_buckets)
+
+
+__all__ = ["SimConfig", "simulate", "run_sweep", "run_sim",
+           "slowdown_percentiles", "prepare", "step_fn", "SimResult",
+           "registered_protocols"]
