@@ -24,7 +24,9 @@ from pathlib import Path
 import numpy as np
 
 from repro.core.sim import SimConfig, simulate, run_sweep
+from repro.core.fabric import FabricConfig
 from repro.core.workloads import make_messages
+from repro.core import scenarios
 from repro.core.priorities import PriorityAllocation
 
 ART = Path(__file__).resolve().parents[1] / "artifacts" / "bench"
@@ -34,8 +36,9 @@ DEFAULT = dict(n_hosts=8, n_messages=2000, max_slots=60_000, ring_cap=2048,
                slot_bytes=256)
 
 
-def _merge_params(n_hosts, n_messages, max_slots, ring_cap, slot_bytes):
-    p = {**DEFAULT}
+def _merge_params(n_hosts, n_messages, max_slots, ring_cap, slot_bytes,
+                  fabric=None):
+    p = {**DEFAULT, "fabric": fabric}
     for k, v in dict(n_hosts=n_hosts, n_messages=n_messages,
                      max_slots=max_slots, ring_cap=ring_cap,
                      slot_bytes=slot_bytes).items():
@@ -44,10 +47,51 @@ def _merge_params(n_hosts, n_messages, max_slots, ring_cap, slot_bytes):
     return p
 
 
+def _fabric_cfg(fabric: dict | None) -> FabricConfig | None:
+    """JSON-able fabric spec (the cache-key form) -> FabricConfig."""
+    return FabricConfig(**fabric) if fabric else None
+
+
+def _point_table(pt: dict, p: dict):
+    """Synthesize one point's MessageTable: a Poisson workload point
+    (``workload`` + ``load``) or a structured scenario (``scenario`` =
+    {"kind": "incast" | "hotspot" | "shuffle", ...kwargs})."""
+    sc = pt.get("scenario")
+    if sc is not None and ("workload" in pt or "load" in pt):
+        raise ValueError(
+            "a sweep point combines 'scenario' with 'workload'/'load', but "
+            "scenario points ignore those fields — they would enter the "
+            "cache key and masquerade as distinct data points; put "
+            "background traffic inside the scenario spec instead")
+    if sc is None:
+        return make_messages(pt["workload"], n_hosts=p["n_hosts"],
+                             load=pt["load"], n_messages=p["n_messages"],
+                             slot_bytes=p["slot_bytes"],
+                             seed=pt.get("seed", 0))
+    sc = dict(sc)
+    kind = sc.pop("kind")
+    common = dict(n_hosts=p["n_hosts"], slot_bytes=p["slot_bytes"],
+                  seed=pt.get("seed", 0))
+    # a spec may spell seed (etc.) inside the scenario dict itself —
+    # those win over the point/topology defaults, never collide
+    common.update({k: sc.pop(k) for k in ("n_hosts", "slot_bytes", "seed")
+                   if k in sc})
+    if kind == "incast":
+        return scenarios.incast(sc.pop("fan_in"), sc.pop("burst_bytes"),
+                                **common, **sc)
+    if kind == "hotspot":
+        return scenarios.hotspot(sc.pop("workload"), **common, **sc)
+    if kind == "shuffle":
+        return scenarios.shuffle(**common, **sc)
+    raise ValueError(f"unknown scenario kind {kind!r}; expected "
+                     f"incast | hotspot | shuffle")
+
+
 def _point_key(*, workload, protocol, load, seed, overcommit, alloc,
-               unsched_limit_bytes, params) -> tuple[dict, Path]:
+               unsched_limit_bytes, params,
+               scenario=None) -> tuple[dict, Path]:
     keyd = dict(workload=workload, protocol=protocol, load=load, seed=seed,
-                overcommit=overcommit, alloc=alloc,
+                overcommit=overcommit, alloc=alloc, scenario=scenario,
                 ul=(unsched_limit_bytes if not isinstance(
                     unsched_limit_bytes, np.ndarray) else "array"), **params)
     h = hashlib.sha1(json.dumps(keyd, sort_keys=True).encode()).hexdigest()[:16]
@@ -70,9 +114,12 @@ def _summarize(result, keyd) -> dict:
 def sim_run(*, workload: str, protocol: str, load: float, seed: int = 0,
             n_hosts=None, n_messages=None, max_slots=None, ring_cap=None,
             slot_bytes=None, overcommit=None, alloc: dict | None = None,
-            unsched_limit_bytes=None, cache: bool = True) -> dict:
-    """Run (or fetch cached) one simulation; returns JSON-safe summary."""
-    p = _merge_params(n_hosts, n_messages, max_slots, ring_cap, slot_bytes)
+            unsched_limit_bytes=None, fabric: dict | None = None,
+            cache: bool = True) -> dict:
+    """Run (or fetch cached) one simulation; returns JSON-safe summary.
+    ``fabric`` is a JSON-able FabricConfig kwargs dict (cache-key form)."""
+    p = _merge_params(n_hosts, n_messages, max_slots, ring_cap, slot_bytes,
+                      fabric)
     keyd, fp = _point_key(workload=workload, protocol=protocol, load=load,
                           seed=seed, overcommit=overcommit, alloc=alloc,
                           unsched_limit_bytes=unsched_limit_bytes, params=p)
@@ -84,7 +131,7 @@ def sim_run(*, workload: str, protocol: str, load: float, seed: int = 0,
                         slot_bytes=p["slot_bytes"], seed=seed)
     cfg = SimConfig(n_hosts=p["n_hosts"], slot_bytes=p["slot_bytes"],
                     protocol=protocol, overcommit=overcommit,
-                    ring_cap=p["ring_cap"],
+                    ring_cap=p["ring_cap"], fabric=_fabric_cfg(fabric),
                     max_slots=min(p["max_slots"],
                                   int(tbl.arrival_slot.max()) + 20_000))
     res = simulate(cfg, tbl, alloc=_alloc_from_dict(alloc),
@@ -96,11 +143,16 @@ def sim_run(*, workload: str, protocol: str, load: float, seed: int = 0,
 
 def sim_sweep(points: list[dict], *, protocol: str, overcommit=None,
               n_hosts=None, n_messages=None, max_slots=None, ring_cap=None,
-              slot_bytes=None, cache: bool = True) -> list[dict]:
+              slot_bytes=None, fabric: dict | None = None,
+              cache: bool = True) -> list[dict]:
     """Cached batched runner: each point is a dict with ``workload`` and
-    ``load`` plus optional ``seed`` / ``alloc`` / ``unsched_limit_bytes``.
-    All points share the protocol/topology config; uncached points run
-    through :func:`repro.core.run_sweep` in one jit trace. Returns one
+    ``load`` (or a ``scenario`` spec, see :func:`_point_table`) plus
+    optional ``seed`` / ``alloc`` / ``unsched_limit_bytes``. All points
+    share the protocol/topology config — including the optional
+    leaf-spine ``fabric`` spec (a FabricConfig kwargs dict); uncached
+    points run through :func:`repro.core.run_sweep`, one jit trace per
+    table-length group (scenario sweeps legitimately vary the message
+    count, which ``run_sweep`` requires constant per batch). Returns one
     summary per point, in order.
 
     Cache keys use the *configured* ``max_slots`` cap (exactly like
@@ -109,12 +161,13 @@ def sim_sweep(points: list[dict], *, protocol: str, overcommit=None,
     fully-cached reruns skip table synthesis entirely. Uncached points
     run at a shared horizon — the longest uncached table's, clamped to
     the cap — recorded in the stored summary as ``max_slots_used``."""
-    p = _merge_params(n_hosts, n_messages, max_slots, ring_cap, slot_bytes)
-    keys = [_point_key(workload=pt["workload"], protocol=protocol,
-                       load=pt["load"], seed=pt.get("seed", 0),
+    p = _merge_params(n_hosts, n_messages, max_slots, ring_cap, slot_bytes,
+                      fabric)
+    keys = [_point_key(workload=pt.get("workload"), protocol=protocol,
+                       load=pt.get("load"), seed=pt.get("seed", 0),
                        overcommit=overcommit, alloc=pt.get("alloc"),
                        unsched_limit_bytes=pt.get("unsched_limit_bytes"),
-                       params=p)
+                       scenario=pt.get("scenario"), params=p)
             for pt in points]
     out: list[dict | None] = [None] * len(points)
     todo = []
@@ -124,27 +177,27 @@ def sim_sweep(points: list[dict], *, protocol: str, overcommit=None,
         else:
             todo.append(i)
     if todo:
-        tables = {i: make_messages(points[i]["workload"],
-                                   n_hosts=p["n_hosts"],
-                                   load=points[i]["load"],
-                                   n_messages=p["n_messages"],
-                                   slot_bytes=p["slot_bytes"],
-                                   seed=points[i].get("seed", 0))
-                  for i in todo}
+        tables = {i: _point_table(points[i], p) for i in todo}
         horizon = max(int(t.arrival_slot.max()) for t in tables.values())
         ms = min(p["max_slots"], horizon + 20_000)
         cfg = SimConfig(n_hosts=p["n_hosts"], slot_bytes=p["slot_bytes"],
                         protocol=protocol, overcommit=overcommit,
-                        ring_cap=p["ring_cap"], max_slots=ms)
-        results = run_sweep(
-            cfg, [tables[i] for i in todo],
-            alloc=[_alloc_from_dict(points[i].get("alloc")) for i in todo],
-            unsched_limit_bytes=[points[i].get("unsched_limit_bytes")
-                                 for i in todo])
-        for i, res in zip(todo, results):
-            keyd, fp = keys[i]
-            out[i] = {**_summarize(res, keyd), "max_slots_used": ms}
-            fp.write_text(json.dumps(out[i]))
+                        ring_cap=p["ring_cap"], fabric=_fabric_cfg(fabric),
+                        max_slots=ms)
+        by_len: dict[int, list[int]] = {}
+        for i in todo:
+            by_len.setdefault(len(tables[i].size), []).append(i)
+        for idxs in by_len.values():
+            results = run_sweep(
+                cfg, [tables[i] for i in idxs],
+                alloc=[_alloc_from_dict(points[i].get("alloc"))
+                       for i in idxs],
+                unsched_limit_bytes=[points[i].get("unsched_limit_bytes")
+                                     for i in idxs])
+            for i, res in zip(idxs, results):
+                keyd, fp = keys[i]
+                out[i] = {**_summarize(res, keyd), "max_slots_used": ms}
+                fp.write_text(json.dumps(out[i]))
     return out
 
 

@@ -1,0 +1,118 @@
+"""Leaf-spine fabric benchmarks (paper §5.2 topology; DESIGN.md §5).
+
+Three harnesses, all through the cached ``sim_sweep`` path:
+
+  ``fabric_oversub``      p99 slowdown + TOR-uplink queue stats across
+                          oversubscription ratios × protocols on a
+                          Poisson workload (the regime where congestion
+                          moves from receiver downlinks to TOR uplinks).
+  ``fig14_fabric_incast`` the paper's Fig. 14 incast shape: fan-in
+                          bursts into one receiver behind a 2:1
+                          oversubscribed fabric, homa vs basic, swept
+                          over the fan-in degree.
+  ``fabric_smoke``        one small leaf-spine incast point (CI cell).
+
+Default scale is CPU-budget (16 hosts / 4 racks); ``--full`` runs the
+paper's 144-host / 9-rack topology.
+"""
+from __future__ import annotations
+
+from benchmarks.common import sim_sweep, emit
+
+OVERSUBS = [1.0, 2.0, 4.0]
+FAB_PROTOS = ["homa", "basic", "pfabric"]
+
+
+def _topo(full: bool) -> dict:
+    if full:
+        return dict(n_hosts=144, racks=9, n_messages=6000,
+                    ring_cap=4096, up_cap=4096, max_slots=120_000)
+    return dict(n_hosts=16, racks=4, n_messages=1200,
+                ring_cap=1024, up_cap=2048, max_slots=30_000)
+
+
+def fabric_oversub(full: bool = False):
+    """Oversubscription × protocol sweep: with 4 racks, ~3/4 of Poisson
+    traffic crosses the core, so tightening the uplink ratio shifts
+    queueing into the TORs; Homa's wire priorities protect small
+    messages there exactly as at the downlink."""
+    t = _topo(full)
+    loads = [0.5, 0.7] if full else [0.6]
+    rows = []
+    for proto in FAB_PROTOS:
+        for ovs in OVERSUBS:
+            fab = dict(racks=t["racks"], oversub=ovs, up_cap=t["up_cap"])
+            pts = [dict(workload="W2", load=ld) for ld in loads]
+            res = sim_sweep(pts, protocol=proto, fabric=fab,
+                            n_hosts=t["n_hosts"],
+                            n_messages=t["n_messages"],
+                            ring_cap=t["ring_cap"],
+                            max_slots=t["max_slots"])
+            for pt, r in zip(pts, res):
+                f = r["fabric"]
+                rows.append(dict(
+                    protocol=proto, oversub=ovs, load=pt["load"],
+                    p99_small=round(r["p99_small"] or 0, 2),
+                    p99_all=round(r["p99_all"] or 0, 2),
+                    completion=round(r["completion_rate"], 3),
+                    up_busy_frac=round(f["up_busy_frac"], 4),
+                    up_q_mean_kb=round(f["up_q_mean_bytes"] / 1024, 1),
+                    up_q_max_kb=round(f["up_q_max_bytes"] / 1024, 1),
+                    lost_chunks=r["lost_chunks"]))
+    emit("fabric_oversub", rows)
+    return rows
+
+
+def fig14_fabric_incast(full: bool = False):
+    """Fig. 14 shape: repeated fan-in bursts + Poisson background on a
+    2:1-oversubscribed leaf-spine, homa vs basic over the fan-in degree.
+    The acceptance claim lives here: homa's p99 small-message slowdown
+    stays low while basic's blows up with the burst size."""
+    t = _topo(full)
+    fan_ins = [4, 8, 12, 24, 48] if full else [4, 8, 12]
+    burst = 2048
+    rows = []
+    for proto in ("homa", "basic"):
+        pts = [dict(scenario=dict(
+                    kind="incast", fan_in=f, burst_bytes=burst,
+                    n_bursts=8, period_slots=1500, background="W2",
+                    background_load=0.5,
+                    n_background=t["n_messages"] // 2),
+                    seed=2)
+               for f in fan_ins]
+        fab = dict(racks=t["racks"], oversub=2.0, up_cap=t["up_cap"])
+        res = sim_sweep(pts, protocol=proto, fabric=fab,
+                        n_hosts=t["n_hosts"], ring_cap=t["ring_cap"],
+                        max_slots=t["max_slots"])
+        for f, r in zip(fan_ins, res):
+            fb = r["fabric"]
+            rows.append(dict(
+                protocol=proto, fan_in=f, burst_bytes=burst,
+                p99_small=round(r["p99_small"] or 0, 2),
+                p50_small=round(r["p50_small"] or 0, 2),
+                completion=round(r["completion_rate"], 3),
+                q_max_kb=round(r["q_max_bytes"] / 1024, 1),
+                up_q_max_kb=round(fb["up_q_max_bytes"] / 1024, 1),
+                lost_chunks=r["lost_chunks"]))
+    emit("fig14_fabric_incast", rows)
+    return rows
+
+
+def fabric_smoke(full: bool = False):
+    """One small leaf-spine incast run end-to-end (the CI cell): checks
+    the fabric tier composes with the cached sweep path and that homa
+    still completes everything without loss."""
+    pts = [dict(scenario=dict(kind="incast", fan_in=8, burst_bytes=2048,
+                              n_bursts=3, period_slots=1000,
+                              background="W1", background_load=0.4,
+                              n_background=200))]
+    res = sim_sweep(pts, protocol="homa",
+                    fabric=dict(racks=4, oversub=2.0), n_hosts=16,
+                    ring_cap=512, max_slots=8000)
+    r = res[0]
+    rows = [dict(protocol="homa", completion=r["completion_rate"],
+                 lost_chunks=r["lost_chunks"],
+                 up_busy_frac=round(r["fabric"]["up_busy_frac"], 4))]
+    emit("fabric_smoke", rows)
+    assert r["completion_rate"] == 1.0 and r["lost_chunks"] == 0, rows
+    return rows

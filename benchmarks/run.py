@@ -22,10 +22,14 @@ def main() -> None:
 
     from benchmarks import paper_figs as F
     from benchmarks import collective_sched as C
+    from benchmarks import fabric_figs as FF
     from benchmarks.sweep_speed import sweep_speed
 
     harnesses = {
         "sweep_speed": sweep_speed,
+        "fabric_smoke": FF.fabric_smoke,
+        "fabric_oversub": FF.fabric_oversub,
+        "fig14_fabric_incast": FF.fig14_fabric_incast,
         "fig10_incast": F.fig10_incast,
         "fig12_slowdown": F.fig12_slowdown,
         "fig13_median": F.fig13_median,

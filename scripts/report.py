@@ -97,6 +97,32 @@ def paper_validation():
                      "finer slots -> lower tail (Fig 14 analogue)",
                      "; ".join(f"{r['slot_bytes']}B: {r['p99_small']:.2f}"
                                for r in f14)))
+    fo = j("fabric_oversub.json")
+    if fo:
+        # key by (oversub, load): full mode emits several loads per ratio
+        homa = {(r["oversub"], r["load"]): r for r in fo
+                if r["protocol"] == "homa"}
+        basic = {(r["oversub"], r["load"]): r for r in fo
+                 if r["protocol"] == "basic"}
+        rows.append(("Leaf-spine oversub sweep (p99 small, homa vs basic)",
+                     "homa flat, basic degrades with oversub (§5.2)",
+                     "; ".join(f"{o}:1@{ld} -> {homa[o, ld]['p99_small']} "
+                               f"vs {basic[o, ld]['p99_small']}"
+                               for o, ld in sorted(homa)
+                               if (o, ld) in basic)))
+        rows.append(("TOR uplink queue max (homa)", "grows with oversub",
+                     "; ".join(f"{o}:1@{ld}: "
+                               f"{homa[o, ld]['up_q_max_kb']}KB"
+                               for o, ld in sorted(homa))))
+    fi = j("fig14_fabric_incast.json")
+    if fi:
+        hw = [r for r in fi if r["protocol"] == "homa"]
+        bw = {r["fan_in"]: r for r in fi if r["protocol"] == "basic"}
+        rows.append(("Fabric incast (Fig 14 shape, 2:1 oversub)",
+                     "homa p99 small << basic at every fan-in",
+                     "; ".join(f"n={r['fan_in']}: {r['p99_small']} vs "
+                               f"{bw[r['fan_in']]['p99_small']}"
+                               for r in hw if r["fan_in"] in bw)))
     sw = j("sweep_speed.json")
     if sw:
         rows.append(("run_sweep vs sequential run_sim (8 seeds)",

@@ -3,17 +3,19 @@
 # host framework. Add sibling subpackages for substrates.
 from repro.core.sim import (SimConfig, SimResult, simulate, run_sweep,
                             run_sim, slowdown_percentiles)
+from repro.core.fabric import FabricConfig
 from repro.core.protocols import (Protocol, SenderPolicy, ReceiverPolicy,
                                   register, get_protocol,
                                   registered_protocols)
 from repro.core.workloads import MessageTable, make_messages
+from repro.core import scenarios
 from repro.core.priorities import PriorityAllocation, allocate_priorities
 
 __all__ = [
-    "SimConfig", "SimResult", "simulate", "run_sweep", "run_sim",
-    "slowdown_percentiles",
+    "SimConfig", "SimResult", "FabricConfig", "simulate", "run_sweep",
+    "run_sim", "slowdown_percentiles",
     "Protocol", "SenderPolicy", "ReceiverPolicy", "register",
     "get_protocol", "registered_protocols",
-    "MessageTable", "make_messages",
+    "MessageTable", "make_messages", "scenarios",
     "PriorityAllocation", "allocate_priorities",
 ]

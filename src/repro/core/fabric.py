@@ -1,0 +1,267 @@
+"""Two-tier leaf-spine fabric model (paper §5.2 topology; DESIGN.md §5).
+
+The paper's large-scale results run on a two-level leaf-spine network:
+144 hosts in 9 racks, each TOR connected to every spine, with a
+configurable oversubscription ratio at the TOR uplinks. This module
+models that fabric as an extra, fully vectorized queueing tier inside
+the simulator's ``lax.scan``:
+
+  host NIC ──> TOR ──(same rack: leaf switching)──> dst downlink queue
+                └──(cross rack: UPLINK PRIORITY QUEUE ──> spine)──┘
+
+- **Uplink queues.** Each TOR has ``n_uplinks = max(1, round(rack_size
+  / oversub))`` uplinks, one per spine, each draining one chunk per
+  slot with the same strict-priority-then-FIFO arbitration as the
+  receiver downlinks. ``oversub`` > 1 therefore means cross-rack
+  traffic contends for less aggregate uplink bandwidth than the rack's
+  hosts can offer — the congestion point Homa's grant scheduling cannot
+  see directly.
+- **Spine selection.** A chunk's uplink (= spine) is chosen by a
+  seeded, deterministic integer hash of ``(src, dst, msg_id, seed)``
+  computed once per message in ``prepare`` — flow-level ECMP at
+  per-message granularity. Same table + same seed => bit-identical
+  runs; changing ``FabricConfig.seed`` reshuffles spine placement only.
+- **Delays.** Intra-rack chunks keep the single-switch latency
+  (``cfg.net_delay_slots``). Cross-rack chunks wait ``leaf_delay_slots``
+  before uplink service (the service slot is the last wait slot), then
+  ``spine_delay_slots`` more before downlink service, so an unloaded
+  cross-rack chunk completes ``leaf_delay_slots + spine_delay_slots``
+  after transmission. The defaults (6 + 6) equal the default
+  ``net_delay_slots = 12``: an unloaded fabric reproduces the
+  single-switch timing exactly.
+- **Priorities.** Uplink queues honour the same wire priority the
+  sender policy stamped on the chunk (``SenderPolicy.chunk_prio``), so
+  Homa's unscheduled/scheduled levels shape queueing at *both* tiers.
+
+``FabricConfig(None)`` (or ``SimConfig.fabric=None``, the default)
+disables the tier entirely: the scan carries no uplink state and the
+program is bit-identical to the single-switch simulator (tested against
+a golden snapshot in ``tests/test_fabric.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.protocols import BIG, I32
+
+
+@dataclasses.dataclass(frozen=True)
+class FabricConfig:
+    """Leaf-spine topology parameters (hashable: a static jit argument).
+
+    ``FabricConfig(None)`` is the disabled sentinel — single-switch
+    behavior, bit-identical to ``SimConfig.fabric=None``.
+    """
+    racks: int | None = None        # None disables the fabric tier
+    oversub: float = 2.0            # rack offered bw : uplink bw ratio
+    leaf_delay_slots: int = 6       # host NIC -> TOR uplink service
+    spine_delay_slots: int = 6      # uplink service -> dst downlink service
+    up_cap: int = 512               # per-uplink buffered chunks
+    seed: int = 0                   # spine-hash seed (ECMP placement)
+
+    @property
+    def enabled(self) -> bool:
+        return self.racks is not None
+
+    def validate(self, n_hosts: int) -> None:
+        if not self.enabled:
+            return
+        if self.racks < 1:
+            raise ValueError(f"FabricConfig.racks must be >= 1, got "
+                             f"{self.racks}")
+        if n_hosts % self.racks:
+            raise ValueError(
+                f"n_hosts={n_hosts} is not divisible by racks={self.racks}; "
+                f"the leaf-spine model needs equal-size racks")
+        if self.oversub <= 0:
+            raise ValueError(f"FabricConfig.oversub must be > 0, got "
+                             f"{self.oversub}")
+        if self.leaf_delay_slots < 0:
+            raise ValueError("FabricConfig.leaf_delay_slots must be >= 0")
+        if self.spine_delay_slots < 1:
+            raise ValueError(
+                "FabricConfig.spine_delay_slots must be >= 1 (a chunk "
+                "cannot traverse uplink and downlink in the same slot)")
+        if self.up_cap < 1:
+            raise ValueError("FabricConfig.up_cap must be >= 1")
+
+    # ---- derived topology (python ints: shape parameters for the scan)
+
+    def rack_size(self, n_hosts: int) -> int:
+        return n_hosts // self.racks
+
+    def n_uplinks(self, n_hosts: int) -> int:
+        """Uplinks per TOR (= number of spines each TOR reaches). The
+        oversubscription ratio is rack_size : n_uplinks."""
+        return max(1, int(round(self.rack_size(n_hosts) / self.oversub)))
+
+    def n_uplinks_total(self, n_hosts: int) -> int:
+        return self.racks * self.n_uplinks(n_hosts)
+
+
+def spine_hash(src: np.ndarray, dst: np.ndarray, msg_id: np.ndarray,
+               seed: int, n_uplinks: int) -> np.ndarray:
+    """Deterministic per-message spine choice in ``[0, n_uplinks)``.
+
+    An xorshift-multiply mix of (src, dst, msg_id, seed) — the model's
+    stand-in for ECMP 5-tuple hashing, at per-message granularity so
+    repeated src->dst pairs spread across spines like distinct RPCs do.
+    """
+    # seed term mixed in python ints then masked: a numpy scalar-scalar
+    # uint32 product warns on the (intended) wraparound
+    seed_mix = np.uint32((seed * 0x27D4EB2F) & 0xFFFFFFFF)
+    h = (np.asarray(src, np.uint32) * np.uint32(0x9E3779B1)
+         ^ np.asarray(dst, np.uint32) * np.uint32(0x85EBCA77)
+         ^ np.asarray(msg_id, np.uint32) * np.uint32(0xC2B2AE3D)
+         ^ seed_mix)
+    h ^= h >> np.uint32(15)
+    h *= np.uint32(0x2C1B3C6D)
+    h ^= h >> np.uint32(12)
+    return (h % np.uint32(n_uplinks)).astype(np.int32)
+
+
+# ------------------------------------------------------- ring primitives ---
+# Shared by downlink and uplink tiers: a (R, cap) pool of ring buffers
+# with occupancy-based insertion and strict-priority / FIFO drain.
+
+def ring_insert(msg_a, prio_a, seq_a, valid_a, row, ok, msg, prio, seq):
+    """Insert up to ``len(row)`` chunks into per-row rings.
+
+    Item i goes into ring ``row[i]`` iff ``ok[i]``; multiple items may
+    target the same row in one slot (they take consecutive free slots in
+    input order). A chunk is dropped only when its ring is actually
+    full. Returns the four updated ring arrays plus the dropped count.
+    """
+    R = valid_a.shape[0]
+    n = row.shape[0]
+    rows = jnp.where(ok, row, R)                              # sentinel R
+    same = (rows[:, None] == rows[None, :]) & ok[None, :] & ok[:, None]
+    ar = jnp.arange(n)
+    rank = jnp.sum(same & (ar[None, :] < ar[:, None]), axis=1)
+    # (r+1)-th free slot per row: the cumsum of free slots is
+    # nondecreasing, so a binary search per item replaces the full
+    # (R, cap, n) match table (see sim.py history).
+    c = jnp.cumsum(~valid_a, axis=1)
+    c_row = c[jnp.minimum(rows, R - 1)]                       # (n, cap)
+    room = c_row[:, -1] > rank
+    okw = ok & room
+    pos = jax.vmap(jnp.searchsorted)(c_row, rank + 1)         # (n,)
+    # suppressed writes go out of bounds (mode="drop"): an in-bounds
+    # no-op write could race a genuine insertion at the same location
+    idx = (jnp.where(okw, rows, R), jnp.where(okw, pos, 0))
+    return (msg_a.at[idx].set(msg, mode="drop"),
+            prio_a.at[idx].set(prio, mode="drop"),
+            seq_a.at[idx].set(seq, mode="drop"),
+            valid_a.at[idx].set(jnp.ones_like(okw), mode="drop"),
+            jnp.sum(ok & ~room))
+
+
+def ring_drain_select(prio_a, seq_a, eligible):
+    """Pick one chunk per row: strict priority, FIFO (seq) within level.
+    Returns ``(slot_idx, any_elig, pmin)`` — the winning slot per row,
+    whether the row drained anything, and the winning priority."""
+    prio_eff = jnp.where(eligible, prio_a, BIG)
+    pmin = prio_eff.min(axis=1)
+    seq_eff = jnp.where(eligible & (prio_a == pmin[:, None]), seq_a, BIG)
+    slot_idx = jnp.argmin(seq_eff, axis=1)
+    return slot_idx, pmin < BIG, pmin
+
+
+# ------------------------------------------------------- fabric stages -----
+
+def init_fabric_state(cfg) -> dict:
+    """Uplink-tier scan state; only fabric-enabled configs carry it."""
+    fab = cfg.fabric
+    U, ucap = fab.n_uplinks_total(cfg.n_hosts), fab.up_cap
+    return {
+        "u_msg": jnp.full((U, ucap), -1, I32),
+        "u_prio": jnp.full((U, ucap), BIG, I32),
+        "u_seq": jnp.full((U, ucap), BIG, I32),
+        "u_valid": jnp.zeros((U, ucap), bool),
+        "u_busy": jnp.zeros((U,), I32),
+        "u_q_sum": jnp.zeros((U,), jnp.float32),
+        "u_q_max": jnp.zeros((U,), I32),
+        "u_lost": jnp.zeros((), I32),
+    }
+
+
+def route_chunks(cfg, st, S, cm, has, dsts, prio_chunk, now):
+    """Route this slot's transmitted chunks into the first queueing tier:
+    same-rack chunks switch at the leaf straight into the destination
+    downlink ring; cross-rack chunks enter their TOR's hashed uplink
+    queue. Returns updated state."""
+    fab = cfg.fabric
+    H = cfg.n_hosts
+    rs = fab.rack_size(H)
+    n_up = fab.n_uplinks(H)
+    src_rack = jnp.arange(H, dtype=I32) // rs
+    dst_rack = jnp.minimum(dsts, H - 1) // rs
+    local = has & (src_rack == dst_rack)
+    remote = has & (src_rack != dst_rack)
+
+    r_msg, r_prio, r_seq, r_valid, d_drop = ring_insert(
+        st["r_msg"], st["r_prio"], st["r_seq"], st["r_valid"],
+        dsts, local, cm, prio_chunk, jnp.full_like(dsts, now))
+
+    urow = src_rack * n_up + S["spine"][cm]
+    u_msg, u_prio, u_seq, u_valid, u_drop = ring_insert(
+        st["u_msg"], st["u_prio"], st["u_seq"], st["u_valid"],
+        urow, remote, cm, prio_chunk, jnp.full_like(urow, now))
+
+    return {**st,
+            "r_msg": r_msg, "r_prio": r_prio, "r_seq": r_seq,
+            "r_valid": r_valid,
+            "u_msg": u_msg, "u_prio": u_prio, "u_seq": u_seq,
+            "u_valid": u_valid,
+            "lost": st["lost"] + d_drop,
+            "u_lost": st["u_lost"] + u_drop}
+
+
+def uplink_drain(cfg, st, S, now):
+    """Drain at most one chunk per TOR uplink (strict priority, FIFO
+    within level) and forward it across its spine into the destination
+    downlink ring, where it becomes eligible after ``spine_delay_slots``.
+    Returns updated state."""
+    fab = cfg.fabric
+    H = cfg.n_hosts
+    M = S["size"].shape[0]
+    U = st["u_valid"].shape[0]
+
+    eligible = st["u_valid"] & (st["u_seq"] + fab.leaf_delay_slots <= now)
+    slot_idx, any_e, _ = ring_drain_select(st["u_prio"], st["u_seq"],
+                                           eligible)
+    uidx = (jnp.arange(U), slot_idx)
+    msg = jnp.where(any_e, st["u_msg"][uidx], M)
+    prio = st["u_prio"][uidx]
+    u_valid = st["u_valid"].at[uidx].set(
+        jnp.where(any_e, False, st["u_valid"][uidx]))
+
+    # forward into the downlink ring with a *virtual* enqueue time such
+    # that (seq + net_delay_slots <= t) fires at t = now + spine_delay:
+    # the downlink's single eligibility rule then covers both tiers, and
+    # FIFO order within a priority level remains arrival-time order at
+    # the destination TOR.
+    dst = jnp.where(any_e, S["dst"][jnp.minimum(msg, M - 1)], H)
+    vseq = jnp.full((U,), now + fab.spine_delay_slots - cfg.net_delay_slots,
+                    I32)
+    r_msg, r_prio, r_seq, r_valid, d_drop = ring_insert(
+        st["r_msg"], st["r_prio"], st["r_seq"], st["r_valid"],
+        dst, any_e, msg, prio, vseq)
+
+    qlen = eligible.sum(axis=1) - any_e.astype(I32)
+    return {**st,
+            "r_msg": r_msg, "r_prio": r_prio, "r_seq": r_seq,
+            "r_valid": r_valid, "u_valid": u_valid,
+            "lost": st["lost"] + d_drop,
+            "u_busy": st["u_busy"] + any_e.astype(I32),
+            "u_q_sum": st["u_q_sum"] + qlen.astype(jnp.float32),
+            "u_q_max": jnp.maximum(st["u_q_max"], qlen)}
+
+
+__all__ = ["FabricConfig", "spine_hash", "ring_insert",
+           "ring_drain_select", "init_fabric_state", "route_chunks",
+           "uplink_drain"]

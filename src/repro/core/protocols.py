@@ -8,7 +8,9 @@ delay, and downlink priority queues:
 
   ``SenderPolicy``    which message each host transmits next (chunk
                       selection order) and the priority stamped on the
-                      outgoing chunk.
+                      outgoing chunk — honoured by every queueing tier
+                      the chunk crosses (TOR uplinks under a leaf-spine
+                      ``FabricConfig``, and the receiver downlink).
   ``ReceiverPolicy``  which messages are granted this slot, the scheduled
                       priority assigned to each, and the overcommitment
                       degree (how many senders are granted concurrently).
@@ -53,9 +55,13 @@ class SenderPolicy:
         raise NotImplementedError
 
     def chunk_prio(self, cfg, st, S, cm, unsched, n_sched):
-        """(H,) int32 priority for each host's chosen chunk (smaller =
-        served first at the downlink). ``cm`` is the chosen message per
-        host (clamped), ``unsched`` marks chunks inside the blind window."""
+        """(H,) int32 wire priority for each host's chosen chunk
+        (smaller = served first). This is the priority stamped in the
+        packet header, so EVERY queueing tier honours it: the receiver
+        downlink always, and — when ``cfg.fabric`` models a leaf-spine
+        network — the TOR uplink queues too (DESIGN.md §5). ``cm`` is
+        the chosen message per host (clamped), ``unsched`` marks chunks
+        inside the blind window."""
         raise NotImplementedError
 
     def on_send(self, cfg, st, S, cm, has, now):

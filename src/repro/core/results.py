@@ -65,9 +65,15 @@ class SimResult:
     q_max_bytes: np.ndarray
     prio_drained_bytes: np.ndarray   # (n_prios,) bytes drained per level
     # scalars
-    lost_chunks: int
+    lost_chunks: int                 # all tiers (downlink + TOR uplink)
     n_complete: int
     n_messages: int
+    # leaf-spine fabric tier (None / zero when the run was single-switch)
+    fabric: dict | None = None       # topology: racks/rack_size/n_uplinks/...
+    tor_up_busy_frac: np.ndarray | None = None    # (U,) uplink utilization
+    tor_up_q_mean_bytes: np.ndarray | None = None
+    tor_up_q_max_bytes: np.ndarray | None = None
+    tor_up_lost_chunks: int = 0
     # optional raw scan state (return_state=True)
     state: dict | None = None
     static: dict | None = None
@@ -107,6 +113,15 @@ class SimResult:
         """JSON-safe aggregate summary (the benchmark-cache schema)."""
         ok = self.steady_mask(warmup_frac)
         small = ok & (self.size_bytes < small_bytes)
+        fabric = None
+        if self.fabric is not None:
+            fabric = {
+                **self.fabric,
+                "up_busy_frac": float(np.mean(self.tor_up_busy_frac)),
+                "up_q_mean_bytes": float(np.mean(self.tor_up_q_mean_bytes)),
+                "up_q_max_bytes": float(np.max(self.tor_up_q_max_bytes)),
+                "up_lost_chunks": int(self.tor_up_lost_chunks),
+            }
         return {
             "protocol": self.protocol,
             "n_complete": int(self.n_complete),
@@ -127,6 +142,7 @@ class SimResult:
             "p50_small": self.percentile(50, small),
             "p99_all": self.percentile(pct, ok),
             "p50_all": self.percentile(50, ok),
+            "fabric": fabric,
         }
 
     def to_json(self, **kwargs) -> str:

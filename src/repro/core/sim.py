@@ -6,7 +6,10 @@ protocols, as one ``lax.scan`` over link-time slots:
   senders     chunk order + priority stamping from the protocol's
               ``SenderPolicy`` (SRPT for Homa), blind until RTTbytes,
               then grant-clocked
-  network     fixed delay (queueing modeled at downlinks, per paper §2.2)
+  network     fixed delay (single switch, the default), or a two-tier
+              leaf-spine fabric with per-TOR uplink priority queues and
+              configurable oversubscription (``SimConfig.fabric``,
+              paper §5.2 topology — see ``repro.core.fabric``)
   downlinks   8-level priority FIFOs per receiver (the TOR egress port);
               one slot drained per tick; exact priority-then-FIFO arbitration
   receivers   grants + scheduled-priority assignment + overcommit degree
@@ -48,6 +51,9 @@ from repro.core.priorities import PriorityAllocation, allocate_priorities, \
 from repro.core.protocols import (Protocol, get_protocol,
                                   registered_protocols, MSG_BITS, MSG_MOD,
                                   BIG, I32)
+from repro.core.fabric import (FabricConfig, spine_hash, ring_insert,
+                               ring_drain_select, init_fabric_state,
+                               route_chunks, uplink_drain)
 from repro.core.results import SimResult, bucketed_percentiles
 
 
@@ -64,13 +70,22 @@ class SimConfig:
     ring_cap: int = 1024                # per-dst buffered chunks (TOR egress)
     phost_timeout_slots: int = 114      # ~3 RTT
     max_slots: int = 20_000
+    fabric: FabricConfig | None = None  # None: single switch (DESIGN.md §5)
 
     def __post_init__(self):
         get_protocol(self.protocol)     # ValueError on unknown protocol
+        if self.fabric is not None:
+            self.fabric.validate(self.n_hosts)
 
     @property
     def rtt_bytes(self) -> int:
         return self.rtt_slots * self.slot_bytes
+
+    @property
+    def fabric_on(self) -> bool:
+        """True iff the leaf-spine tier is modeled (``FabricConfig(None)``
+        and ``fabric=None`` both mean the single-switch fast path)."""
+        return self.fabric is not None and self.fabric.enabled
 
 
 def _to_slots(nbytes: np.ndarray, slot_bytes: int) -> np.ndarray:
@@ -83,8 +98,16 @@ def prepare(cfg: SimConfig, table: MessageTable,
     """Static per-message arrays for the scan."""
     proto = get_protocol(cfg.protocol)
     M = len(table.size)
-    assert M <= MSG_MOD, f"max {MSG_MOD} messages"
-    assert cfg.max_slots < 2 ** 21
+    if M > MSG_MOD:
+        raise ValueError(
+            f"table has {M} messages but the simulator's packed sort keys "
+            f"hold at most {MSG_MOD} (MSG_BITS={MSG_BITS}); split the "
+            f"table into shorter runs or raise MSG_BITS in protocols.py")
+    if cfg.max_slots >= 2 ** 21:
+        raise ValueError(
+            f"max_slots={cfg.max_slots} overflows the int32 sort-key "
+            f"encoding (limit 2**21-1 = {2 ** 21 - 1}); lower max_slots "
+            f"or coarsen slot_bytes so the horizon fits")
     size_slots = _to_slots(table.size, cfg.slot_bytes)
 
     if alloc is None:
@@ -113,6 +136,12 @@ def prepare(cfg: SimConfig, table: MessageTable,
             np.arange(cfg.n_hosts)[:, None] == table.dst[None, :]),
         "msg_ids": jnp.arange(M, dtype=I32),
     }
+    if cfg.fabric_on:
+        # per-message ECMP spine choice (seeded, deterministic) — only
+        # fabric-enabled configs carry the extra static array
+        static["spine"] = jnp.asarray(spine_hash(
+            table.src, table.dst, np.arange(M), cfg.fabric.seed,
+            cfg.fabric.n_uplinks(cfg.n_hosts)), I32)
     return static, alloc
 
 
@@ -121,6 +150,7 @@ def _init_state(cfg: SimConfig, proto: Protocol, M: int):
     z = functools.partial(jnp.zeros, dtype=I32)
     return {
         **proto.extra_state(cfg, M),          # protocol-private carry
+        **(init_fabric_state(cfg) if cfg.fabric_on else {}),
         "sent": z((M,)),
         "granted_s": z((M,)),                 # sender-visible grant (slots)
         "grant_r": z((M,)),                   # receiver-issued grant (slots)
@@ -196,42 +226,27 @@ def step_fn(cfg: SimConfig, proto: Protocol, S, n_sched: int, st, now):
           "uplink_busy": st["uplink_busy"] + has.astype(I32)}
     st = proto.sender.on_send(cfg, st, S, cm, has, now)
 
-    # ---- 3. insert chunks into free buffer slots at the destination
+    # ---- 3. route chunks into the first queueing tier. Single switch:
+    # straight into the destination downlink ring (true occupancy-based
+    # buffering; a chunk drops only when the ring is actually full).
+    # Leaf-spine fabric: same-rack chunks switch at the leaf, cross-rack
+    # chunks enter their TOR's hashed uplink queue, and each uplink
+    # drains one chunk per slot toward the destination downlink.
     dsts = jnp.where(has, S["dst"][cm], H)                   # sentinel H
-    same = (dsts[:, None] == dsts[None, :]) & has[None, :] & has[:, None]
-    rank = jnp.sum(same & (jnp.arange(H)[None, :] < jnp.arange(H)[:, None]),
-                   axis=1)                                    # rank within dst
-    # r-th free slot per dst row: true occupancy-based buffering; a chunk
-    # is dropped only when the buffer is actually full. The cumsum of free
-    # slots is nondecreasing, so the (r+1)-th free slot is the first index
-    # where it reaches r+1 — a binary search per sender instead of the
-    # (H, cap, H) match table this used to build every slot.
-    c = jnp.cumsum(~st["r_valid"], axis=1)
-    c_dst = c[jnp.minimum(dsts, H - 1)]                       # (H, cap)
-    room = c_dst[:, -1] > rank                                # buffer not full
-    okw = has & room
-    lost = st["lost"] + jnp.sum(has & ~room)
-    pos = jax.vmap(jnp.searchsorted)(c_dst, rank + 1)         # (H,)
-    # suppressed writes go out of bounds (mode="drop"): an in-bounds no-op
-    # write could race a genuine insertion at the same scatter location
-    idx = (jnp.where(okw, dsts, H), jnp.where(okw, pos, 0))
-    st = {**st,
-          "r_msg": st["r_msg"].at[idx].set(cm, mode="drop"),
-          "r_prio": st["r_prio"].at[idx].set(prio_chunk, mode="drop"),
-          "r_seq": st["r_seq"].at[idx].set(
-              jnp.full_like(dsts, now), mode="drop"),
-          "r_valid": st["r_valid"].at[idx].set(
-              jnp.ones_like(okw), mode="drop"),
-          "lost": lost}
+    if not cfg.fabric_on:
+        r_msg, r_prio, r_seq, r_valid, n_drop = ring_insert(
+            st["r_msg"], st["r_prio"], st["r_seq"], st["r_valid"],
+            dsts, has, cm, prio_chunk, jnp.full_like(dsts, now))
+        st = {**st, "r_msg": r_msg, "r_prio": r_prio, "r_seq": r_seq,
+              "r_valid": r_valid, "lost": st["lost"] + n_drop}
+    else:
+        st = route_chunks(cfg, st, S, cm, has, dsts, prio_chunk, now)
+        st = uplink_drain(cfg, st, S, now)
 
     # ---- 4. downlink drain: strict priority, FIFO within level
     eligible = st["r_valid"] & (st["r_seq"] + cfg.net_delay_slots <= now)
-    prio_eff = jnp.where(eligible, st["r_prio"], BIG)        # (H, cap)
-    pmin = prio_eff.min(axis=1)                              # (H,)
-    seq_eff = jnp.where(eligible & (st["r_prio"] == pmin[:, None]),
-                        st["r_seq"], BIG)
-    slot_idx = jnp.argmin(seq_eff, axis=1)                   # (H,)
-    any_elig = pmin < BIG
+    slot_idx, any_elig, pmin = ring_drain_select(st["r_prio"], st["r_seq"],
+                                                 eligible)
     hidx = (jnp.arange(H), slot_idx)
     drained_msg = jnp.where(any_elig, st["r_msg"][hidx], M)
     recv = st["recv"].at[jnp.minimum(drained_msg, M - 1)].add(
@@ -293,8 +308,32 @@ def _finalize(cfg: SimConfig, table: MessageTable, S, alloc, st,
     arrival = np.asarray(S["arrival"])
     done = st["completion"] >= 0
     elapsed = np.where(done, st["completion"] - arrival + 1, -1)
-    ideal = size_slots + cfg.net_delay_slots
+    # unloaded baseline: cross-rack chunks traverse leaf + spine, so a
+    # fabric with non-default delays keeps slowdown anchored at 1.0
+    net_delay = cfg.net_delay_slots
+    if cfg.fabric_on:
+        rs = cfg.fabric.rack_size(cfg.n_hosts)
+        cross = (np.asarray(table.src) // rs) != (np.asarray(table.dst)
+                                                  // rs)
+        net_delay = np.where(cross, cfg.fabric.leaf_delay_slots
+                             + cfg.fabric.spine_delay_slots, net_delay)
+    ideal = size_slots + net_delay
     slowdown = np.where(done, elapsed / ideal, np.nan)
+
+    fabric = None
+    tor_kw = {}
+    if cfg.fabric_on:
+        fab = cfg.fabric
+        fabric = {"racks": fab.racks,
+                  "rack_size": fab.rack_size(cfg.n_hosts),
+                  "n_uplinks": fab.n_uplinks(cfg.n_hosts),
+                  "oversub": fab.oversub, "seed": fab.seed}
+        tor_kw = dict(
+            tor_up_busy_frac=st["u_busy"] / cfg.max_slots,
+            tor_up_q_mean_bytes=st["u_q_sum"] / cfg.max_slots
+            * cfg.slot_bytes,
+            tor_up_q_max_bytes=st["u_q_max"] * cfg.slot_bytes,
+            tor_up_lost_chunks=int(st["u_lost"]))
 
     return SimResult(
         protocol=cfg.protocol, alloc=alloc,
@@ -307,8 +346,9 @@ def _finalize(cfg: SimConfig, table: MessageTable, S, alloc, st,
         q_mean_bytes=st["q_sum"] / cfg.max_slots * cfg.slot_bytes,
         q_max_bytes=st["q_max"] * cfg.slot_bytes,
         prio_drained_bytes=st["prio_drained"] * cfg.slot_bytes,
-        lost_chunks=int(st["lost"]),
+        lost_chunks=int(st["lost"]) + int(st.get("u_lost", 0)),
         n_complete=int(done.sum()), n_messages=len(size_slots),
+        fabric=fabric, **tor_kw,
         state=st if return_state else None,
         static=jax.tree.map(np.asarray, S) if return_state else None,
     )
@@ -422,6 +462,6 @@ def slowdown_percentiles(stats: dict | SimResult, pct: float = 99.0,
                                 stats["done"], pct, n_buckets)
 
 
-__all__ = ["SimConfig", "simulate", "run_sweep", "run_sim",
+__all__ = ["SimConfig", "FabricConfig", "simulate", "run_sweep", "run_sim",
            "slowdown_percentiles", "prepare", "step_fn", "SimResult",
            "registered_protocols"]

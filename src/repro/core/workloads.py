@@ -63,6 +63,12 @@ def make_messages(workload: str, *, n_hosts: int, load: float,
 
     Each host's downlink drains one slot (slot_bytes) per tick; `load` is the
     fraction of aggregate link bandwidth consumed by message bytes.
+
+    ``incast=(fan_in, burst_bytes, period_slots)`` overlays periodic
+    fan-in bursts on the background traffic: every ``period_slots``,
+    ``fan_in`` senders each emit one ``burst_bytes`` response to host 0
+    simultaneously (``repro.core.scenarios.incast``), until the
+    background's arrival horizon is covered.
     """
     rng = np.random.default_rng(seed)
     sizes = sample_sizes(workload, n_messages, rng, max_bytes)
@@ -75,9 +81,24 @@ def make_messages(workload: str, *, n_hosts: int, load: float,
     src = rng.integers(0, n_hosts, n_messages)
     dst = rng.integers(0, n_hosts - 1, n_messages)
     dst = np.where(dst >= src, dst + 1, dst)   # dst != src
-    return MessageTable(src.astype(np.int32), dst.astype(np.int32),
-                        sizes, arrivals.astype(np.int32), workload, load,
-                        slot_bytes)
+    tbl = MessageTable(src.astype(np.int32), dst.astype(np.int32),
+                       sizes, arrivals.astype(np.int32), workload, load,
+                       slot_bytes)
+    if incast is not None:
+        # deferred import: scenarios builds on this module's generators
+        from repro.core import scenarios
+        fan_in, burst_bytes, period_slots = incast
+        if period_slots < 1:
+            raise ValueError(f"incast period_slots must be >= 1, got "
+                             f"{period_slots}")
+        horizon = int(arrivals.max()) if n_messages else 0
+        bursts = scenarios.incast(
+            fan_in, burst_bytes, n_hosts=n_hosts, slot_bytes=slot_bytes,
+            n_bursts=max(horizon // period_slots, 1),
+            period_slots=period_slots, first_slot=period_slots, seed=seed)
+        tbl = scenarios.merge_tables(tbl, bursts, workload=workload,
+                                     load=load)
+    return tbl
 
 
 def bytes_weighted_unsched_fraction(sizes: np.ndarray, unsched_limit: int) -> float:

@@ -23,10 +23,14 @@ SMALL = dict(n_hosts=4, max_slots=4000, ring_cap=512)
 
 # ------------------------------------------------------------ invariants ---
 
+@pytest.mark.parametrize("load", [0.5, 0.9])
 @pytest.mark.parametrize("proto", ["homa", "basic", "phost", "pias",
                                    "pfabric", "ndp"])
-def test_conservation_and_completion(proto):
-    tbl = make_messages("W2", n_hosts=4, load=0.6, n_messages=300,
+def test_conservation_and_completion(proto, load):
+    """Chunk conservation + causality for every registered protocol, at a
+    moderate and a near-saturation load (scatter/drop bugs the percentile
+    tests can't see)."""
+    tbl = make_messages("W2", n_hosts=4, load=load, n_messages=300,
                         slot_bytes=256, seed=5)
     cfg = SimConfig(protocol=proto, **SMALL)
     stx = run_sim(cfg, tbl, return_state=True)
@@ -42,6 +46,8 @@ def test_conservation_and_completion(proto):
     np.testing.assert_array_equal(st["recv"][done], S["size"][done])
     # senders never send beyond size or grant
     assert (st["sent"] <= S["size"]).all()
+    # causality: nothing completes before it arrives
+    assert (st["completion"][done] >= S["arrival"][done]).all()
 
 
 def test_grant_invariant_rtt_bound():
