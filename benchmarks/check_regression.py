@@ -1,0 +1,98 @@
+"""Bench-smoke regression gate (CI satellite).
+
+Compares the benchmark summaries a CI run just wrote under
+``artifacts/bench/`` against the baselines committed in
+``benchmarks/baselines/`` and FAILS on drift, instead of only uploading
+artifacts for a human to eyeball:
+
+- deterministic fields (completions, losses, queue depths, slowdown
+  percentiles — everything the simulator computes) must match EXACTLY:
+  the simulator is seeded and bit-reproducible, so any drift is a
+  behaviour change that must be reviewed and re-baselined on purpose;
+- wall-time fields (``sweep_speed``'s timings) only gate within a
+  generous multiplicative factor — machine speed is not a regression.
+
+    PYTHONPATH=src python -m benchmarks.check_regression            # gate
+    PYTHONPATH=src python -m benchmarks.check_regression --update   # rebase
+
+``--update`` copies the current artifacts over the baselines; commit the
+result together with whatever change legitimately moved the numbers.
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import sys
+from pathlib import Path
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "bench"
+BASE = Path(__file__).resolve().parent / "baselines"
+
+# harness -> {field: max allowed ratio vs baseline}; every field not
+# listed gates on exact equality. Harnesses not listed here are not
+# gated at all (e.g. backend_compare: pure timing).
+WALL_FIELDS = {
+    "fig10_incast": {},
+    "fabric_smoke": {},
+    "sweep_speed": {"sequential_s": 25.0, "sweep_s": 25.0, "ratio": 25.0},
+}
+
+
+def _wall_ok(a, b, factor: float) -> bool:
+    try:
+        a, b = float(a), float(b)
+    except (TypeError, ValueError):
+        return a == b
+    if a <= 0 or b <= 0:
+        return True          # degenerate timings: don't gate on them
+    return max(a / b, b / a) <= factor
+
+
+def check_harness(name: str) -> list[str]:
+    wall = WALL_FIELDS[name]
+    got_fp, want_fp = ART / f"{name}.json", BASE / f"{name}.json"
+    if not want_fp.exists():
+        return [f"{name}: no committed baseline {want_fp} — run with "
+                f"--update and commit it"]
+    if not got_fp.exists():
+        return [f"{name}: {got_fp} missing — did the benchmark run?"]
+    want = json.loads(want_fp.read_text())
+    got = json.loads(got_fp.read_text())
+    if len(got) != len(want):
+        return [f"{name}: row count {len(got)} != baseline {len(want)}"]
+    errs = []
+    for i, (g, w) in enumerate(zip(got, want)):
+        for field in sorted(set(g) | set(w)):
+            gv, wv = g.get(field), w.get(field)
+            if field in wall:
+                if not _wall_ok(gv, wv, wall[field]):
+                    errs.append(f"{name}[{i}].{field}: {gv} vs baseline "
+                                f"{wv} (beyond {wall[field]}x)")
+            elif gv != wv:
+                errs.append(f"{name}[{i}].{field}: {gv!r} != baseline "
+                            f"{wv!r}")
+    return errs
+
+
+def main() -> int:
+    if "--update" in sys.argv[1:]:
+        BASE.mkdir(exist_ok=True)
+        for name in WALL_FIELDS:
+            fp = ART / f"{name}.json"
+            if not fp.exists():
+                print(f"skip {name}: {fp} missing (run the benchmark "
+                      f"first)")
+                continue
+            shutil.copy(fp, BASE / f"{name}.json")
+            print(f"baselined {BASE / f'{name}.json'}")
+        return 0
+    errors = [e for name in WALL_FIELDS for e in check_harness(name)]
+    for e in errors:
+        print(f"REGRESSION: {e}")
+    if not errors:
+        print(f"bench gate OK ({', '.join(WALL_FIELDS)})")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

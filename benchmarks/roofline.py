@@ -109,7 +109,54 @@ def analyze_cell(arch: str, shape: str, mesh: str):
     }
 
 
+def backend_compare(full: bool = False):
+    """Simulator-side roofline cell: slots/sec of the per-slot
+    arbitration hot path under each compute backend — reference vs
+    pallas-interpret everywhere, plus pallas-compiled when a TPU is
+    attached (interpret mode emulates the kernel in plain XLA, so only
+    the compiled row measures real kernel dispatch; DESIGN.md §6).
+    Registered as the ``backend_compare`` harness in benchmarks/run.py
+    and runnable standalone via ``--backend-cell``."""
+    import time
+
+    import jax
+
+    from benchmarks.common import emit
+    from repro.core import SimConfig, simulate, make_messages
+
+    n_msgs, max_slots = (2000, 30_000) if full else (600, 8_000)
+    tbl = make_messages("W2", n_hosts=16, load=0.7, n_messages=n_msgs,
+                        slot_bytes=256, seed=0)
+    cells = [("reference", dict(backend="reference")),
+             ("pallas-interpret", dict(backend="pallas",
+                                       pallas_interpret=True))]
+    if jax.default_backend() == "tpu":
+        cells.append(("pallas-compiled", dict(backend="pallas",
+                                              pallas_interpret=False)))
+    rows = []
+    for label, kw in cells:
+        cfg = SimConfig(protocol="homa", n_hosts=16, ring_cap=1024,
+                        max_slots=max_slots, **kw)
+        simulate(cfg, tbl)                          # compile + warm caches
+        t0 = time.perf_counter()
+        r = simulate(cfg, tbl)
+        dt = time.perf_counter() - t0
+        rows.append(dict(backend=label, jax_backend=jax.default_backend(),
+                         slots=max_slots, wall_s=round(dt, 3),
+                         slots_per_sec=round(max_slots / dt),
+                         n_complete=r.n_complete))
+    # the backends must agree on the physics, whatever their speed
+    # (a real error, not an assert: must survive `python -O`)
+    if len({row["n_complete"] for row in rows}) != 1:
+        raise RuntimeError(f"backend divergence in n_complete: {rows}")
+    emit("backend_compare", rows)
+    return rows
+
+
 def main():
+    if "--backend-cell" in sys.argv[1:]:
+        backend_compare("--full" in sys.argv[1:])
+        return
     from repro.configs import ARCH_NAMES
     from repro.configs.base import SHAPES, cell_is_skipped
     rows = []

@@ -23,10 +23,12 @@ def main() -> None:
     from benchmarks import paper_figs as F
     from benchmarks import collective_sched as C
     from benchmarks import fabric_figs as FF
+    from benchmarks.roofline import backend_compare
     from benchmarks.sweep_speed import sweep_speed
 
     harnesses = {
         "sweep_speed": sweep_speed,
+        "backend_compare": backend_compare,
         "fabric_smoke": FF.fabric_smoke,
         "fabric_oversub": FF.fabric_oversub,
         "fig14_fabric_incast": FF.fig14_fabric_incast,

@@ -1,0 +1,91 @@
+"""Regenerate the golden simulator snapshots under tests/golden/.
+
+    PYTHONPATH=src python scripts/make_golden.py [--check]
+
+Two snapshots, each pinning all six protocols on the REFERENCE backend:
+
+  fabric_disabled.json   the pre-fabric single-switch simulator (PR 2) —
+                         the fabric tier must stay invisible by default.
+  fabric_enabled.json    a 4-rack 2:1-oversubscribed leaf-spine run —
+                         pins the uplink tier AND anchors the pallas
+                         backend's bit-identity tests (test_backend.py).
+
+``--check`` regenerates in memory and fails (exit 1) on any drift
+instead of rewriting — run it before committing simulator changes that
+are supposed to be behaviour-preserving.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+from repro.core import SimConfig, FabricConfig, simulate, make_messages
+
+GOLDEN_DIR = Path(__file__).resolve().parents[1] / "tests" / "golden"
+PROTOS = ["homa", "basic", "phost", "pias", "pfabric", "ndp"]
+
+DISABLED_META = dict(workload="W2", n_hosts=8, load=0.7, n_messages=300,
+                     slot_bytes=256, seed=11, max_slots=4000, ring_cap=512)
+ENABLED_META = dict(workload="W2", n_hosts=8, load=0.7, n_messages=250,
+                    slot_bytes=256, seed=11, max_slots=3000, ring_cap=512,
+                    racks=4, oversub=2.0, up_cap=256)
+
+
+def _table(meta):
+    return make_messages(meta["workload"], n_hosts=meta["n_hosts"],
+                         load=meta["load"], n_messages=meta["n_messages"],
+                         slot_bytes=meta["slot_bytes"], seed=meta["seed"])
+
+
+def _snapshot(meta, fabric: FabricConfig | None) -> dict:
+    tbl = _table(meta)
+    out = {}
+    for proto in PROTOS:
+        cfg = SimConfig(protocol=proto, n_hosts=meta["n_hosts"],
+                        max_slots=meta["max_slots"],
+                        ring_cap=meta["ring_cap"], fabric=fabric,
+                        backend="reference")
+        r = simulate(cfg, tbl)
+        rec = {
+            "completion": [int(x) for x in r.completion],
+            "lost_chunks": int(r.lost_chunks),
+            "q_max_bytes": [int(x) for x in r.q_max_bytes],
+            "prio_drained_bytes": [int(x) for x in r.prio_drained_bytes],
+            "busy": [round(float(x), 8) for x in r.busy_frac],
+        }
+        if fabric is not None and fabric.enabled:
+            rec["tor_up_q_max_bytes"] = [int(x) for x
+                                         in r.tor_up_q_max_bytes]
+            rec["tor_up_lost_chunks"] = int(r.tor_up_lost_chunks)
+        out[proto] = rec
+    return {"meta": meta, "protocols": out}
+
+
+def main() -> int:
+    check = "--check" in sys.argv[1:]
+    targets = {
+        "fabric_disabled.json": _snapshot(DISABLED_META, None),
+        "fabric_enabled.json": _snapshot(
+            ENABLED_META, FabricConfig(racks=ENABLED_META["racks"],
+                                       oversub=ENABLED_META["oversub"],
+                                       up_cap=ENABLED_META["up_cap"])),
+    }
+    rc = 0
+    for name, snap in targets.items():
+        fp = GOLDEN_DIR / name
+        text = json.dumps(snap)
+        if check:
+            if not fp.exists() or json.loads(fp.read_text()) != snap:
+                print(f"DRIFT: {fp}")
+                rc = 1
+            else:
+                print(f"ok: {fp}")
+        else:
+            fp.write_text(text)
+            print(f"wrote {fp} ({len(text)} bytes)")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -47,6 +47,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.protocols import BIG, I32
+from repro.kernels.arbiter import dispatch
+from repro.kernels.arbiter.ref import priority_arbiter_ref
 
 
 @dataclasses.dataclass(frozen=True)
@@ -163,12 +165,25 @@ def ring_insert(msg_a, prio_a, seq_a, valid_a, row, ok, msg, prio, seq):
 def ring_drain_select(prio_a, seq_a, eligible):
     """Pick one chunk per row: strict priority, FIFO (seq) within level.
     Returns ``(slot_idx, any_elig, pmin)`` — the winning slot per row,
-    whether the row drained anything, and the winning priority."""
-    prio_eff = jnp.where(eligible, prio_a, BIG)
-    pmin = prio_eff.min(axis=1)
-    seq_eff = jnp.where(eligible & (prio_a == pmin[:, None]), seq_a, BIG)
-    slot_idx = jnp.argmin(seq_eff, axis=1)
+    whether the row drained anything, and the winning priority. The
+    math lives in ``kernels.arbiter.ref.priority_arbiter_ref`` — ONE
+    reference oracle, shared with the backend dispatcher, so the sim
+    and the standalone kernel tests cannot drift apart."""
+    pmin, slot_idx = priority_arbiter_ref(prio_a, seq_a, eligible)
     return slot_idx, pmin < BIG, pmin
+
+
+def drain_select(prio_a, seq_a, eligible, *, backend: str = "reference",
+                 interpret: bool | None = None):
+    """Backend-dispatched :func:`ring_drain_select` (DESIGN.md §6): the
+    simulator's per-slot arbitration hot spot, routable to the Pallas
+    ``priority_arbiter`` kernel via ``SimConfig.backend``. Both paths
+    are bit-identical — winner slot, eligibility, and priority — for
+    ragged shapes and all-ineligible rows (property-tested in
+    ``tests/test_kernels.py``)."""
+    bp, bi = dispatch.arbitrate(prio_a, seq_a, eligible, backend=backend,
+                                interpret=interpret)
+    return bi, bp < BIG, bp
 
 
 # ------------------------------------------------------- fabric stages -----
@@ -232,8 +247,9 @@ def uplink_drain(cfg, st, S, now):
     U = st["u_valid"].shape[0]
 
     eligible = st["u_valid"] & (st["u_seq"] + fab.leaf_delay_slots <= now)
-    slot_idx, any_e, _ = ring_drain_select(st["u_prio"], st["u_seq"],
-                                           eligible)
+    slot_idx, any_e, _ = drain_select(st["u_prio"], st["u_seq"], eligible,
+                                      backend=cfg.backend,
+                                      interpret=cfg.pallas_interpret)
     uidx = (jnp.arange(U), slot_idx)
     msg = jnp.where(any_e, st["u_msg"][uidx], M)
     prio = st["u_prio"][uidx]
@@ -263,5 +279,5 @@ def uplink_drain(cfg, st, S, now):
 
 
 __all__ = ["FabricConfig", "spine_hash", "ring_insert",
-           "ring_drain_select", "init_fabric_state", "route_chunks",
-           "uplink_drain"]
+           "ring_drain_select", "drain_select", "init_fabric_state",
+           "route_chunks", "uplink_drain"]

@@ -34,7 +34,8 @@ import dataclasses
 
 import jax.numpy as jnp
 import numpy as np
-from jax import lax
+
+from repro.kernels.arbiter.dispatch import topk as backend_topk
 
 I32 = jnp.int32
 BIG = jnp.int32(2 ** 30)
@@ -128,22 +129,26 @@ def window_grants(cfg, st, S, gate):
 def topk_srpt_grants(cfg, st, S, eligible, K, n_sched):
     """Shared helper: each receiver grants its top-K SRPT messages one RTT
     ahead and assigns scheduled priorities lowest-levels-first (paper
-    §3.4/Fig. 5), shortest message on the highest scheduled level."""
+    §3.4/Fig. 5), shortest message on the highest scheduled level. The
+    top-K selection is backend-dispatched (``SimConfig.backend``,
+    DESIGN.md §6): the pallas path runs the ``srpt_topk`` kernel, whose
+    index output IS the winning message id (columns of ``mat``), so no
+    key-decoding or re-matching scan is needed on either backend."""
     size, dst_oh = S["size"], S["dst_onehot"]
     remaining = jnp.maximum(size - st["recv"], 0)
     K = min(K, size.shape[0])        # can't select more than M messages
-    # encode (remaining, msg) so top_k recovers both; smaller remaining wins.
-    # Ties break toward the SMALLEST msg id: a stable active set is what
-    # gives SRPT its run-to-completion behaviour — an unstable tie-break
-    # churns the active message and leaks grants to every tied message
+    # key orders by (remaining, msg): smaller remaining wins, ties break
+    # toward the SMALLEST msg id. A stable active set is what gives SRPT
+    # its run-to-completion behaviour — an unstable tie-break churns the
+    # active message and leaks grants to every tied message
     # (catastrophic under incast, where all messages are the same size).
     keyval = ((jnp.int32(1 << 17) - jnp.minimum(remaining, (1 << 17) - 1))
               << MSG_BITS) | (MSG_MOD - 1 - S["msg_ids"])
     mat = jnp.where(dst_oh & eligible[None, :], keyval[None, :], 0)  # (H, M)
-    vals, _ = lax.top_k(mat, K)                                      # (H, K)
+    vals, idx = backend_topk(mat, K, backend=cfg.backend,
+                             interpret=cfg.pallas_interpret)         # (H, K)
     valid = vals > 0
-    msgs = jnp.where(valid, MSG_MOD - 1 - (vals & (MSG_MOD - 1)),
-                     MSG_MOD)                                        # sentinel
+    msgs = jnp.where(valid, idx, MSG_MOD)                            # sentinel
     n_active = valid.sum(axis=1)                                     # (H,)
     # scheduled priority: rank r (0 = fewest remaining) among A active gets
     # level (A-1-r): lowest levels used first, shortest on top (paper §3.4)

@@ -28,6 +28,12 @@ homa | basic | phost | pias | pfabric | ndp are registered out of the box
 (see DESIGN.md §3 for the approximations in each baseline). ``step_fn`` is
 policy-agnostic orchestration — it never inspects the protocol name.
 
+The per-slot arbitration hot path (downlink drain, TOR uplink drain,
+receiver grant-set top-K) is backend-dispatched (DESIGN.md §6):
+``SimConfig.backend = "reference" | "pallas"`` (default from
+``$SIM_BACKEND``) selects pure-jnp math or the ``kernels.arbiter``
+Pallas kernels — bit-identical by contract, golden-tested.
+
 Entry points:
 
   ``simulate(cfg, table)``    one run -> :class:`SimResult`
@@ -52,9 +58,11 @@ from repro.core.protocols import (Protocol, get_protocol,
                                   registered_protocols, MSG_BITS, MSG_MOD,
                                   BIG, I32)
 from repro.core.fabric import (FabricConfig, spine_hash, ring_insert,
-                               ring_drain_select, init_fabric_state,
+                               drain_select, init_fabric_state,
                                route_chunks, uplink_drain)
 from repro.core.results import SimResult, bucketed_percentiles
+from repro.kernels.arbiter.dispatch import resolve_backend, \
+    resolve_interpret
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,9 +79,20 @@ class SimConfig:
     phost_timeout_slots: int = 114      # ~3 RTT
     max_slots: int = 20_000
     fabric: FabricConfig | None = None  # None: single switch (DESIGN.md §5)
+    # compute backend for the per-slot arbitration hot path (DESIGN.md §6):
+    # "reference" (pure-jnp) | "pallas" (kernels.arbiter); None resolves
+    # from $SIM_BACKEND. Both backends are bit-identical by contract.
+    backend: str | None = None
+    # pallas interpret mode; None auto-selects (interpreted off-TPU,
+    # $SIM_PALLAS_INTERPRET overrides). Resolved to a concrete bool here
+    # so jit retraces when the effective mode changes.
+    pallas_interpret: bool | None = None
 
     def __post_init__(self):
         get_protocol(self.protocol)     # ValueError on unknown protocol
+        object.__setattr__(self, "backend", resolve_backend(self.backend))
+        object.__setattr__(self, "pallas_interpret",
+                           resolve_interpret(self.pallas_interpret))
         if self.fabric is not None:
             self.fabric.validate(self.n_hosts)
 
@@ -244,9 +263,12 @@ def step_fn(cfg: SimConfig, proto: Protocol, S, n_sched: int, st, now):
         st = uplink_drain(cfg, st, S, now)
 
     # ---- 4. downlink drain: strict priority, FIFO within level
+    # (backend-dispatched: cfg.backend="pallas" runs the priority_arbiter
+    # kernel, bit-identical to the reference math — DESIGN.md §6)
     eligible = st["r_valid"] & (st["r_seq"] + cfg.net_delay_slots <= now)
-    slot_idx, any_elig, pmin = ring_drain_select(st["r_prio"], st["r_seq"],
-                                                 eligible)
+    slot_idx, any_elig, pmin = drain_select(st["r_prio"], st["r_seq"],
+                                            eligible, backend=cfg.backend,
+                                            interpret=cfg.pallas_interpret)
     hidx = (jnp.arange(H), slot_idx)
     drained_msg = jnp.where(any_elig, st["r_msg"][hidx], M)
     recv = st["recv"].at[jnp.minimum(drained_msg, M - 1)].add(

@@ -1,0 +1,163 @@
+"""Backend dispatch for the per-slot arbitration hot path (DESIGN.md §6).
+
+One entry point per arbitration primitive, each routable to either
+compute backend:
+
+  ``arbitrate(prio, seq, elig, backend=...)``   strict-priority-then-FIFO
+      winner per row — the math of ``fabric.ring_drain_select``.
+  ``topk(keys, K, backend=...)``                per-row top-K (values AND
+      source columns) — the receiver's SRPT grant-set selection.
+
+``backend="reference"`` runs the pure-jnp oracles (``ref.py``);
+``backend="pallas"`` runs the Pallas TPU kernels (``kernel.py``) through
+the padded wrappers below. Both are bit-identical by contract — the
+golden-snapshot tests in ``tests/test_backend.py`` and the property
+tests in ``tests/test_kernels.py`` enforce it — so ``SimConfig.backend``
+is a pure performance knob.
+
+This module also owns the padding/block-size heuristics that used to be
+duplicated per call site in ``ops.py``: rows pad to the 8-sublane
+multiple, columns pad to the 128-lane multiple (the TPU tile for int32),
+and the block size is the largest preferred power of two dividing the
+padded dimension. Padding values are chosen so padded entries can never
+win (``BIG`` priority / ``False`` eligibility / the ``NEG`` key
+sentinel — NOT zero, which is a legitimate key value).
+
+Interpret-mode selection (``resolve_interpret``): Pallas TPU kernels
+only compile on a TPU, so off-TPU the pallas backend auto-selects
+``interpret=True`` — the kernel is traced into plain XLA ops and runs
+(and is tested) everywhere. ``SIM_PALLAS_INTERPRET=0|1`` overrides, so
+a TPU host can still benchmark the interpreted path.
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.arbiter.kernel import (priority_arbiter, srpt_topk,
+                                          BIG, NEG)
+from repro.kernels.arbiter.ref import priority_arbiter_ref, srpt_topk_ref
+
+BACKENDS = ("reference", "pallas")
+_ROW_UNIT = 8          # TPU sublane multiple for int32 blocks
+_COL_UNIT = 128        # TPU lane multiple
+
+
+def resolve_backend(name: str | None) -> str:
+    """``None`` -> ``$SIM_BACKEND`` (default ``reference``); unknown
+    names raise a ``ValueError`` listing the choices."""
+    if name is None:
+        name = os.environ.get("SIM_BACKEND") or "reference"
+    if name not in BACKENDS:
+        raise ValueError(f"unknown backend {name!r}; expected one of "
+                         f"{list(BACKENDS)} (or $SIM_BACKEND)")
+    return name
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """``None`` -> auto: interpret everywhere except on a real TPU,
+    overridable via ``$SIM_PALLAS_INTERPRET``."""
+    if interpret is not None:
+        return interpret
+    # empty string == unset, the same convention resolve_backend uses
+    env = os.environ.get("SIM_PALLAS_INTERPRET")
+    if env:
+        return env.lower() not in ("0", "false")
+    return jax.default_backend() != "tpu"
+
+
+# ------------------------------------------------- padding heuristics ------
+
+def _padded_dim(n: int, unit: int) -> int:
+    return -(-n // unit) * unit
+
+
+def _block(n_padded: int, preferred: int, unit: int) -> int:
+    """Largest power-of-two multiple of ``unit`` that divides the padded
+    dimension, capped at ``preferred`` (a power-of-two multiple of
+    ``unit``). Never degenerates to one un-tiled block."""
+    b = preferred
+    while b > unit and n_padded % b:
+        b //= 2
+    return min(b, n_padded)
+
+
+def _pad2(x, rows: int, cols: int, fill):
+    """Pad a 2-D array up to (rows, cols) with ``fill``."""
+    H, C = x.shape
+    if rows == H and cols == C:
+        return x
+    return jnp.pad(x, ((0, rows - H), (0, cols - C)), constant_values=fill)
+
+
+# ---------------------------------------------------- pallas wrappers ------
+
+@partial(jax.jit, static_argnames=("interpret",))
+def pallas_arbitrate(prio, seq, elig, *, interpret: bool = False):
+    """Padded ``priority_arbiter`` call: returns ``(best_prio, best_idx)``
+    per row, ``best_prio == BIG`` (and ``best_idx == 0``) if the row has
+    no eligible entry — exactly ``ref.priority_arbiter_ref``."""
+    H, cap = prio.shape
+    Hp = _padded_dim(H, _ROW_UNIT)
+    capp = _padded_dim(cap, _COL_UNIT)
+    bh = _block(Hp, _ROW_UNIT, _ROW_UNIT)
+    bc = _block(capp, 256, _COL_UNIT)
+    pp = _pad2(prio, Hp, capp, BIG)
+    sp = _pad2(seq, Hp, capp, BIG)
+    ep = _pad2(elig, Hp, capp, False)
+    bp, bi = priority_arbiter(pp, sp, ep, block_h=bh, block_c=bc,
+                              interpret=interpret)
+    return bp[:H], bi[:H]
+
+
+@partial(jax.jit, static_argnames=("K", "interpret"))
+def pallas_topk(keys, K: int, *, interpret: bool = False):
+    """Padded ``srpt_topk`` call: returns ``(vals, idx)`` — the K largest
+    keys per row (descending, clamped at 0) and their source columns
+    (-1 where fewer than K positive keys exist). Columns pad with the
+    ``NEG`` sentinel, never zero: 0 is a legitimate (ineligible) key
+    value and must still outrank padding so indices stay in-bounds."""
+    H, M = keys.shape
+    if M < K:
+        keys = jnp.pad(keys, ((0, 0), (0, K - M)), constant_values=NEG)
+        M = K
+    Hp = _padded_dim(H, _ROW_UNIT)
+    Mp = _padded_dim(M, _COL_UNIT)
+    bh = _block(Hp, _ROW_UNIT, _ROW_UNIT)
+    bm = _block(Mp, 512, _COL_UNIT)
+    kp = _pad2(keys, Hp, Mp, NEG)
+    vals, idx = srpt_topk(kp, K, block_h=bh, block_m=bm,
+                          interpret=interpret)
+    vals, idx = vals[:H], idx[:H]
+    return jnp.maximum(vals, 0), jnp.where(vals > 0, idx, -1)
+
+
+# -------------------------------------------------------- dispatchers ------
+
+def arbitrate(prio, seq, elig, *, backend: str = "reference",
+              interpret: bool | None = None):
+    """Strict-priority, FIFO-within-level winner per row on the chosen
+    backend. Returns ``(best_prio (H,), best_idx (H,))``; rows with no
+    eligible entry return ``(BIG, 0)``. Bit-identical across backends."""
+    if resolve_backend(backend) == "reference":
+        return priority_arbiter_ref(prio, seq, elig)
+    return pallas_arbitrate(prio, seq, elig,
+                            interpret=resolve_interpret(interpret))
+
+
+def topk(keys, K: int, *, backend: str = "reference",
+         interpret: bool | None = None):
+    """Per-row top-K keys + source columns on the chosen backend.
+    Returns ``(vals (H, K), idx (H, K))``: descending keys clamped at 0,
+    columns -1 where fewer than K positive keys exist. Ties resolve to
+    the lowest column on both backends (``lax.top_k`` stability)."""
+    if resolve_backend(backend) == "reference":
+        return srpt_topk_ref(keys, K)
+    return pallas_topk(keys, K, interpret=resolve_interpret(interpret))
+
+
+__all__ = ["BACKENDS", "resolve_backend", "resolve_interpret",
+           "arbitrate", "topk", "pallas_arbitrate", "pallas_topk"]

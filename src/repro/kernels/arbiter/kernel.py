@@ -9,7 +9,11 @@ vectorized arbitration kernel over the chunk buffer.
 
 2. ``srpt_topk``: per receiver row, the K messages with the best (largest)
    key — Homa's overcommitment grant set (top-K SRPT). Iterated masked max
-   with running top-K registers in scratch.
+   with running top-K value AND column registers in scratch, so the grant
+   path gets the winning message ids directly (no re-matching scan).
+
+Padding/block-size selection lives in ``dispatch.py``; these raw kernels
+require exact block multiples.
 """
 from __future__ import annotations
 
@@ -20,7 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-BIG = 2 ** 30   # plain int: jnp constants would be captured as kernel operands
+BIG = 2 ** 30    # plain int: jnp constants would be captured as kernel operands
+NEG = -(2 ** 30)  # ineligible key sentinel: below every legitimate key (>= 0)
 
 
 # ------------------------------------------------------ priority arbiter ---
@@ -90,50 +95,71 @@ def priority_arbiter(prio, seq, elig, *, block_h: int = 8,
 
 # ---------------------------------------------------------- SRPT top-K -----
 
-def _topk_kernel(key_ref, out_ref, top_scr, *, K: int, nm: int):
+def _topk_kernel(key_ref, val_out, idx_out, val_scr, idx_scr, *,
+                 K: int, bm: int, nm: int):
     mi = pl.program_id(1)
 
     @pl.when(mi == 0)
     def _init():
-        top_scr[...] = jnp.zeros_like(top_scr)
+        val_scr[...] = jnp.full_like(val_scr, NEG)
+        idx_scr[...] = jnp.full_like(idx_scr, -1)
 
     k = key_ref[...]                                        # (bh, bm) int32
+    bh = k.shape[0]
+    col = (jax.lax.broadcasted_iota(jnp.int32, (bh, bm), 1)
+           + mi * bm)                                       # global columns
     # merge block into running top-K: combine candidates, extract K maxima.
-    # Keys are strictly positive for eligible entries, so 0 is the neutral
-    # "taken/absent" value.
-    cand = jnp.concatenate([top_scr[...], k], axis=1)       # (bh, K+bm)
-    tops = top_scr[...]
+    # NEG is the neutral "taken/absent" sentinel — NOT zero, which is a
+    # legitimate (ineligible) key value that must still outrank padding.
+    # Extraction takes the FIRST occurrence of each maximum; running tops
+    # sit before block columns in the concat and block columns ascend, so
+    # ties resolve to the lowest global column — lax.top_k's stability.
+    cand_v = jnp.concatenate([val_scr[...], k], axis=1)     # (bh, K+bm)
+    cand_i = jnp.concatenate([idx_scr[...], col], axis=1)
+    tops_v, tops_i = val_scr[...], idx_scr[...]
     for r in range(K):
-        m = jnp.max(cand, axis=1)                           # (bh,)
-        tops = tops.at[:, r].set(m)
-        is_m = cand == m[:, None]
-        first = jnp.cumsum(is_m.astype(jnp.int32), axis=1) == 1
-        cand = jnp.where(is_m & first, jnp.int32(0), cand)
+        m = jnp.max(cand_v, axis=1)                         # (bh,)
+        is_m = cand_v == m[:, None]
+        first = is_m & (jnp.cumsum(is_m.astype(jnp.int32), axis=1) == 1)
+        tops_v = tops_v.at[:, r].set(m)
+        tops_i = tops_i.at[:, r].set(
+            jnp.max(jnp.where(first, cand_i, -1), axis=1))
+        cand_v = jnp.where(first, jnp.int32(NEG), cand_v)
+        cand_i = jnp.where(first, jnp.int32(-1), cand_i)
 
-    top_scr[...] = tops
+    val_scr[...] = tops_v
+    idx_scr[...] = tops_i
 
     @pl.when(mi == nm - 1)
     def _fin():
-        out_ref[...] = top_scr[...]
+        val_out[...] = val_scr[...]
+        idx_out[...] = idx_scr[...]
 
 
 def srpt_topk(keys, K: int, *, block_h: int = 8, block_m: int = 512,
               interpret: bool = False):
     """keys: (H, M) int32, 0 = ineligible, larger = more urgent.
-    Returns (H, K) int32 of the K largest keys per row (0-padded)."""
+    Returns raw ``(vals (H, K), idx (H, K))`` int32: the K largest keys
+    per row in descending order plus their source columns. Rows with
+    fewer than K entries carry the ``NEG`` sentinel / -1 — callers
+    normalize (``dispatch.pallas_topk`` clamps vals at 0 and masks idx)."""
     H, M = keys.shape
     bh = min(block_h, H)
     bm = min(block_m, M)
     assert H % bh == 0 and M % bm == 0
     nm = M // bm
 
-    kernel = functools.partial(_topk_kernel, K=K, nm=nm)
+    kernel = functools.partial(_topk_kernel, K=K, bm=bm, nm=nm)
     return pl.pallas_call(
         kernel,
         grid=(H // bh, nm),
         in_specs=[pl.BlockSpec((bh, bm), lambda hi, mi: (hi, mi))],
-        out_specs=pl.BlockSpec((bh, K), lambda hi, mi: (hi, 0)),
-        out_shape=jax.ShapeDtypeStruct((H, K), jnp.int32),
-        scratch_shapes=[pltpu.VMEM((bh, K), jnp.int32)],
+        out_specs=[pl.BlockSpec((bh, K), lambda hi, mi: (hi, 0)),
+                   pl.BlockSpec((bh, K), lambda hi, mi: (hi, 0))],
+        out_shape=[jax.ShapeDtypeStruct((H, K), jnp.int32),
+                   jax.ShapeDtypeStruct((H, K), jnp.int32)],
+        # NB: distinct scratch objects — a repeated instance would alias
+        scratch_shapes=[pltpu.VMEM((bh, K), jnp.int32),
+                        pltpu.VMEM((bh, K), jnp.int32)],
         interpret=interpret,
     )(keys)

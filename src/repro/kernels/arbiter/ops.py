@@ -1,43 +1,34 @@
-"""Jit'd wrappers for the arbitration kernels (pad rows/cols to block
-multiples; interpret mode for CPU validation)."""
+"""Standalone Pallas entry points for the arbitration kernels.
+
+Thin compatibility layer over ``dispatch.py``, which owns the shared
+padding/block-size heuristics (rows pad to the 8-sublane multiple,
+columns to the 128-lane multiple — the old per-call ``bc = 256 if cap %
+256 == 0 else cap`` degenerated to one un-tiled block for any
+non-multiple capacity such as ``ring_cap=1000``) and the
+reference/pallas backend selection the simulator uses
+(``SimConfig.backend``, DESIGN.md §6).
+
+``interpret=None`` auto-selects: interpreted everywhere except on a
+real TPU (``dispatch.resolve_interpret``).
+"""
 from __future__ import annotations
 
-from functools import partial
-
-import jax
-import jax.numpy as jnp
-
-from repro.kernels.arbiter.kernel import priority_arbiter, srpt_topk, BIG
+from repro.kernels.arbiter.dispatch import (pallas_arbitrate, pallas_topk,
+                                            resolve_interpret)
+from repro.kernels.arbiter.kernel import BIG, NEG
 
 
-def _pad_rows(x, bh, fill):
-    H = x.shape[0]
-    p = (-H) % bh
-    return jnp.pad(x, ((0, p),) + ((0, 0),) * (x.ndim - 1),
-                   constant_values=fill), H
+def arbitrate(prio, seq, elig, *, interpret: bool | None = None):
+    """Pallas strict-priority-then-FIFO winner per row; see
+    :func:`dispatch.arbitrate` for the backend-dispatched form."""
+    return pallas_arbitrate(prio, seq, elig,
+                            interpret=resolve_interpret(interpret))
 
 
-@partial(jax.jit, static_argnames=("interpret",))
-def arbitrate(prio, seq, elig, *, interpret: bool = False):
-    H, cap = prio.shape
-    bh = 8 if H % 8 == 0 else (H if H <= 8 else 1)
-    bc = 256 if cap % 256 == 0 else cap
-    pp, H0 = _pad_rows(prio, bh, BIG)
-    sp, _ = _pad_rows(seq, bh, BIG)
-    ep, _ = _pad_rows(elig, bh, False)
-    bp, bi = priority_arbiter(pp, sp, ep, block_h=bh, block_c=bc,
-                              interpret=interpret)
-    return bp[:H0], bi[:H0]
+def topk(keys, K: int, *, interpret: bool | None = None):
+    """Pallas per-row top-K ``(vals, idx)``; see :func:`dispatch.topk`
+    for the backend-dispatched form."""
+    return pallas_topk(keys, K, interpret=resolve_interpret(interpret))
 
 
-@partial(jax.jit, static_argnames=("K", "interpret"))
-def topk(keys, K: int, *, interpret: bool = False):
-    H, M = keys.shape
-    if M < K:   # fewer candidates than K: pad columns with ineligible zeros
-        keys = jnp.pad(keys, ((0, 0), (0, K - M)))
-        M = K
-    bh = 8 if H % 8 == 0 else (H if H <= 8 else 1)
-    bm = 512 if M % 512 == 0 else M
-    kp, H0 = _pad_rows(keys, bh, 0)
-    out = srpt_topk(kp, K, block_h=bh, block_m=bm, interpret=interpret)
-    return out[:H0]
+__all__ = ["arbitrate", "topk", "BIG", "NEG"]

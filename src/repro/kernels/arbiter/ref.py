@@ -19,9 +19,18 @@ def priority_arbiter_ref(prio, seq, elig):
     return pmin, idx
 
 
+NEG = jnp.int32(-(2 ** 30))   # ineligible key sentinel (see kernel.py)
+
+
 def srpt_topk_ref(keys, K: int):
-    """K largest keys per row (descending, 0-padded)."""
+    """K largest keys per row plus their source columns.
+    Returns ``(vals (H, K), idx (H, K))``: descending keys clamped at 0,
+    columns -1 where fewer than K positive keys exist. Short rows pad
+    with the ``NEG`` sentinel — not zero, which is a legitimate
+    (ineligible) key value that must still outrank padding."""
     if keys.shape[1] < K:
-        keys = jnp.pad(keys, ((0, 0), (0, K - keys.shape[1])))
-    vals, _ = lax.top_k(keys, K)
-    return jnp.maximum(vals, 0).astype(jnp.int32)
+        keys = jnp.pad(keys, ((0, 0), (0, K - keys.shape[1])),
+                       constant_values=NEG)
+    vals, idx = lax.top_k(keys, K)
+    return (jnp.maximum(vals, 0).astype(jnp.int32),
+            jnp.where(vals > 0, idx.astype(jnp.int32), -1))

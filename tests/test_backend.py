@@ -1,0 +1,131 @@
+"""Compute-backend tests (DESIGN.md §6).
+
+``SimConfig.backend="pallas"`` must be BIT-identical to the reference
+backend for every registered protocol, fabric enabled and disabled. Both
+legs pin against golden snapshots (``tests/golden/fabric_disabled.json``
+from PR 2 and ``fabric_enabled.json`` from this PR), so a divergence
+fails even if both backends drift together. The CI matrix additionally
+runs the whole tier-1 suite under ``SIM_BACKEND=pallas``, which routes
+every simulator test in the repo through the kernels.
+"""
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import (SimConfig, FabricConfig, simulate, run_sweep,
+                        make_messages)
+from repro.kernels.arbiter import dispatch
+
+GOLDEN = Path(__file__).parent / "golden"
+ALL_PROTOS = ["homa", "basic", "phost", "pias", "pfabric", "ndp"]
+BACKENDS = ["reference", "pallas"]
+
+
+@pytest.fixture(scope="module")
+def disabled():
+    return json.loads((GOLDEN / "fabric_disabled.json").read_text())
+
+
+@pytest.fixture(scope="module")
+def enabled():
+    return json.loads((GOLDEN / "fabric_enabled.json").read_text())
+
+
+def _table(meta):
+    return make_messages(meta["workload"], n_hosts=meta["n_hosts"],
+                         load=meta["load"], n_messages=meta["n_messages"],
+                         slot_bytes=meta["slot_bytes"], seed=meta["seed"])
+
+
+def _cfg(meta, proto, backend, fabric=None):
+    return SimConfig(protocol=proto, n_hosts=meta["n_hosts"],
+                     max_slots=meta["max_slots"], ring_cap=meta["ring_cap"],
+                     fabric=fabric, backend=backend)
+
+
+def _assert_matches(r, want, fabric: bool):
+    assert [int(x) for x in r.completion] == want["completion"]
+    assert r.lost_chunks == want["lost_chunks"]
+    assert [int(x) for x in r.q_max_bytes] == want["q_max_bytes"]
+    assert [int(x) for x in r.prio_drained_bytes] \
+        == want["prio_drained_bytes"]
+    if fabric:
+        assert [int(x) for x in r.tor_up_q_max_bytes] \
+            == want["tor_up_q_max_bytes"]
+        assert r.tor_up_lost_chunks == want["tor_up_lost_chunks"]
+
+
+# ------------------------------------------------ golden bit-identity ------
+
+@pytest.mark.parametrize("proto", ALL_PROTOS)
+def test_pallas_matches_disabled_golden(disabled, proto):
+    """Fabric OFF: the pallas backend reproduces the pre-fabric golden
+    bit-for-bit for every protocol (acceptance criterion)."""
+    meta, want = disabled["meta"], disabled["protocols"][proto]
+    r = simulate(_cfg(meta, proto, "pallas"), _table(meta))
+    _assert_matches(r, want, fabric=False)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("proto", ALL_PROTOS)
+def test_backends_match_enabled_golden(enabled, proto, backend):
+    """Fabric ON (4 racks, 2:1 oversub): BOTH backends reproduce the
+    fabric-enabled golden bit-for-bit — downlink drain, TOR uplink
+    drain, and the receiver grant set all route through the backend."""
+    meta, want = enabled["meta"], enabled["protocols"][proto]
+    fab = FabricConfig(racks=meta["racks"], oversub=meta["oversub"],
+                       up_cap=meta["up_cap"])
+    r = simulate(_cfg(meta, proto, backend, fabric=fab), _table(meta))
+    _assert_matches(r, want, fabric=True)
+
+
+def test_pallas_sweep_bit_identical_to_reference():
+    """The pallas backend must survive run_sweep's vmap over tables:
+    batched pallas == sequential reference."""
+    tables = [make_messages("W2", n_hosts=8, load=0.6, n_messages=100,
+                            slot_bytes=256, seed=s) for s in range(2)]
+    ref_cfg = SimConfig(protocol="homa", n_hosts=8, max_slots=2000,
+                        ring_cap=256, backend="reference")
+    pal_cfg = SimConfig(protocol="homa", n_hosts=8, max_slots=2000,
+                        ring_cap=256, backend="pallas")
+    seq = [simulate(ref_cfg, t) for t in tables]
+    swe = run_sweep(pal_cfg, tables)
+    for a, b in zip(seq, swe):
+        np.testing.assert_array_equal(a.completion, b.completion)
+        np.testing.assert_array_equal(a.q_max_bytes, b.q_max_bytes)
+
+
+# ------------------------------------------------------ config plumbing ----
+
+def test_backend_env_default(monkeypatch):
+    monkeypatch.delenv("SIM_BACKEND", raising=False)
+    assert SimConfig().backend == "reference"
+    monkeypatch.setenv("SIM_BACKEND", "pallas")
+    assert SimConfig().backend == "pallas"
+    # an explicit argument beats the environment
+    assert SimConfig(backend="reference").backend == "reference"
+
+
+def test_unknown_backend_raises(monkeypatch):
+    with pytest.raises(ValueError, match="unknown backend"):
+        SimConfig(backend="cuda")
+    monkeypatch.setenv("SIM_BACKEND", "not-a-backend")
+    with pytest.raises(ValueError, match="SIM_BACKEND"):
+        SimConfig()
+
+
+def test_interpret_resolution(monkeypatch):
+    import jax
+    monkeypatch.delenv("SIM_PALLAS_INTERPRET", raising=False)
+    on_tpu = jax.default_backend() == "tpu"
+    assert dispatch.resolve_interpret(None) == (not on_tpu)
+    assert dispatch.resolve_interpret(True) is True
+    assert dispatch.resolve_interpret(False) is False
+    monkeypatch.setenv("SIM_PALLAS_INTERPRET", "0")
+    assert dispatch.resolve_interpret(None) is False
+    monkeypatch.setenv("SIM_PALLAS_INTERPRET", "1")
+    assert dispatch.resolve_interpret(None) is True
+    # SimConfig resolves the mode to a concrete bool (a jit retrace key)
+    assert SimConfig(backend="pallas").pallas_interpret is True

@@ -10,6 +10,7 @@ from repro.kernels.attention.ops import attention
 from repro.kernels.attention.ref import attention_ref
 from repro.kernels.ssd.ops import ssd
 from repro.kernels.ssd.ref import ssd_ref
+from repro.kernels.arbiter import dispatch
 from repro.kernels.arbiter import ops as arb_ops
 from repro.kernels.arbiter.ref import priority_arbiter_ref, srpt_topk_ref
 
@@ -112,7 +113,12 @@ def test_ssd_decay_property(seed):
 
 # -------------------------------------------------------------- arbiter ----
 
-@pytest.mark.parametrize("H,cap", [(8, 256), (16, 512), (4, 64), (13, 100)])
+# (13, 100) and (8, 1000) exercise the padded ragged path: the old
+# heuristic (`bc = 256 if cap % 256 == 0 else cap`) degenerated to one
+# un-tiled block for any non-multiple capacity; dispatch now pads
+# columns up to the block multiple instead (satellite fix).
+@pytest.mark.parametrize("H,cap", [(8, 256), (16, 512), (4, 64), (13, 100),
+                                   (8, 1000), (1, 1)])
 def test_arbiter_matches_ref(H, cap):
     rng = np.random.default_rng(H * cap)
     prio = jnp.asarray(rng.integers(0, 8, (H, cap)), jnp.int32)
@@ -121,22 +127,64 @@ def test_arbiter_matches_ref(H, cap):
     bp, bi = arb_ops.arbitrate(prio, seq, elig, interpret=True)
     rp, ri = priority_arbiter_ref(prio, seq, elig)
     np.testing.assert_array_equal(np.asarray(bp), np.asarray(rp))
-    # compare selected (prio, seq) rather than index (ties broken anyhow)
-    has = np.asarray(rp) < 2 ** 30
-    sel_k = np.asarray(seq)[np.arange(H), np.asarray(bi)]
-    ref_k = np.asarray(seq)[np.arange(H), np.asarray(ri)]
-    np.testing.assert_array_equal(sel_k[has], ref_k[has])
+    # exact index equality: both backends break (prio, seq) ties toward
+    # the lowest slot, and the simulator's ring state depends on it
+    np.testing.assert_array_equal(np.asarray(bi), np.asarray(ri))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 12), st.integers(1, 60), st.integers(0, 2 ** 16),
+       st.sampled_from([0.0, 0.3, 1.0]))
+def test_arbitrate_matches_ring_drain_select(H, cap, seed, p_elig):
+    """Property (satellite): ``dispatch.arbitrate`` equals the simulator's
+    ``ring_drain_select`` oracle — winner index, priority, eligibility —
+    over ragged H/cap shapes, dense ties, and all-ineligible rows, for
+    BOTH backends."""
+    from repro.core.fabric import ring_drain_select
+    rng = np.random.default_rng(seed)
+    prio = jnp.asarray(rng.integers(0, 4, (H, cap)), jnp.int32)
+    seq = jnp.asarray(rng.integers(0, 8, (H, cap)), jnp.int32)  # dense ties
+    elig = jnp.asarray(rng.random((H, cap)) < p_elig)
+    elig = elig.at[0].set(False)              # force an all-ineligible row
+    slot_idx, any_e, pmin = ring_drain_select(prio, seq, elig)
+    for backend in ("reference", "pallas"):
+        bp, bi = dispatch.arbitrate(prio, seq, elig, backend=backend,
+                                    interpret=True)
+        np.testing.assert_array_equal(np.asarray(bp), np.asarray(pmin))
+        np.testing.assert_array_equal(np.asarray(bp < 2 ** 30),
+                                      np.asarray(any_e))
+        np.testing.assert_array_equal(np.asarray(bi), np.asarray(slot_idx))
 
 
 @pytest.mark.parametrize("H,M,K", [(8, 512, 7), (16, 1024, 4), (4, 128, 1),
-                                   (8, 512, 8)])
+                                   (8, 512, 8), (13, 60, 5)])
 def test_topk_matches_ref(H, M, K):
     rng = np.random.default_rng(H + M + K)
     keys = jnp.asarray(rng.integers(0, 1 << 28, (H, M)), jnp.int32)
     keys = jnp.where(jnp.asarray(rng.random((H, M)) < 0.5), keys, 0)
-    out = arb_ops.topk(keys, K, interpret=True)
-    ref = srpt_topk_ref(keys, K)
-    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    vals, idx = arb_ops.topk(keys, K, interpret=True)
+    rv, ri = srpt_topk_ref(keys, K)
+    np.testing.assert_array_equal(np.asarray(vals), np.asarray(rv))
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ri))
+
+
+def test_topk_short_rows_use_ineligible_sentinel():
+    """Regression (satellite): with M < K the columns used to be
+    zero-filled, which collides with legitimate zero keys — with an
+    index output that could surface a padding column as a winner. Pads
+    must use the NEG sentinel: absent slots report (0, -1) and no index
+    ever points outside the real columns."""
+    keys = jnp.asarray([[0, 5, 0]], jnp.int32)          # legit zero keys
+    vals, idx = arb_ops.topk(keys, 5, interpret=True)
+    np.testing.assert_array_equal(np.asarray(vals), [[5, 0, 0, 0, 0]])
+    np.testing.assert_array_equal(np.asarray(idx), [[1, -1, -1, -1, -1]])
+    rv, ri = srpt_topk_ref(keys, 5)
+    np.testing.assert_array_equal(np.asarray(vals), np.asarray(rv))
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ri))
+    # all-zero rows: nothing is eligible, nothing points at padding
+    z_vals, z_idx = arb_ops.topk(jnp.zeros((2, 3), jnp.int32), 4,
+                                 interpret=True)
+    assert (np.asarray(z_vals) == 0).all() and (np.asarray(z_idx) == -1).all()
 
 
 @settings(max_examples=20, deadline=None)
@@ -145,6 +193,7 @@ def test_topk_matches_ref(H, M, K):
 def test_topk_property(H, M, K, seed):
     rng = np.random.default_rng(seed)
     keys = jnp.asarray(rng.integers(0, 1 << 20, (H, M)), jnp.int32)
-    out = np.asarray(arb_ops.topk(keys, K, interpret=True))
-    ref = np.asarray(srpt_topk_ref(keys, K))
-    np.testing.assert_array_equal(out, ref)
+    vals, idx = arb_ops.topk(keys, K, interpret=True)
+    rv, ri = srpt_topk_ref(keys, K)
+    np.testing.assert_array_equal(np.asarray(vals), np.asarray(rv))
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ri))
