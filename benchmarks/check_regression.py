@@ -14,9 +14,12 @@ artifacts for a human to eyeball:
 
     PYTHONPATH=src python -m benchmarks.check_regression            # gate
     PYTHONPATH=src python -m benchmarks.check_regression --update   # rebase
+    PYTHONPATH=src python -m benchmarks.check_regression --only faults_smoke
 
 ``--update`` copies the current artifacts over the baselines; commit the
 result together with whatever change legitimately moved the numbers.
+``--only name[,name...]`` restricts both modes to a subset of harnesses
+(used by the CI backend matrix, which runs only the faults cell).
 """
 from __future__ import annotations
 
@@ -34,6 +37,7 @@ BASE = Path(__file__).resolve().parent / "baselines"
 WALL_FIELDS = {
     "fig10_incast": {},
     "fabric_smoke": {},
+    "faults_smoke": {},
     "sweep_speed": {"sequential_s": 25.0, "sweep_s": 25.0, "ratio": 25.0},
 }
 
@@ -75,9 +79,19 @@ def check_harness(name: str) -> list[str]:
 
 
 def main() -> int:
-    if "--update" in sys.argv[1:]:
+    args = sys.argv[1:]
+    names = list(WALL_FIELDS)
+    if "--only" in args:
+        only = set(args[args.index("--only") + 1].split(","))
+        unknown = only - set(WALL_FIELDS)
+        if unknown:
+            print(f"unknown harness(es) {sorted(unknown)}; gated: "
+                  f"{names}")
+            return 2
+        names = [n for n in names if n in only]
+    if "--update" in args:
         BASE.mkdir(exist_ok=True)
-        for name in WALL_FIELDS:
+        for name in names:
             fp = ART / f"{name}.json"
             if not fp.exists():
                 print(f"skip {name}: {fp} missing (run the benchmark "
@@ -86,11 +100,11 @@ def main() -> int:
             shutil.copy(fp, BASE / f"{name}.json")
             print(f"baselined {BASE / f'{name}.json'}")
         return 0
-    errors = [e for name in WALL_FIELDS for e in check_harness(name)]
+    errors = [e for name in names for e in check_harness(name)]
     for e in errors:
         print(f"REGRESSION: {e}")
     if not errors:
-        print(f"bench gate OK ({', '.join(WALL_FIELDS)})")
+        print(f"bench gate OK ({', '.join(names)})")
     return 1 if errors else 0
 
 

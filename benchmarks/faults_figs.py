@@ -1,0 +1,109 @@
+"""Fault-injection benchmarks (DESIGN.md §7).
+
+Two harnesses, both through the cached ``sim_sweep`` path:
+
+  ``fig_faults``    resilience figure: homa vs basic p99 small-message
+                    slowdown + recovery time (a) across uplink loss
+                    rates under ECMP, and (b) through a single-TOR-
+                    uplink failure window under ECMP vs flowlet vs
+                    adaptive routing. The acceptance claim lives here:
+                    homa degrades gracefully and stays below basic, and
+                    adaptive routing erases the failure window that
+                    static ECMP turns into a black hole.
+  ``faults_smoke``  one lossy leaf-spine point (CI cell): homa at 1%
+                    uplink loss completes every message; the exact
+                    retransmission/recovery numbers are pinned by the
+                    committed baseline.
+
+Scale matches ``fabric_figs`` CPU-budget defaults (16 hosts / 4 racks
+at 2:1 oversubscription).
+"""
+from __future__ import annotations
+
+from benchmarks.common import sim_sweep, emit
+
+LOSS_RATES = [0.0, 0.005, 0.01, 0.02, 0.05]
+ROUTINGS = ["ecmp", "flowlet", "adaptive"]
+TOPO = dict(n_hosts=16, racks=4, oversub=2.0, n_messages=1200,
+            ring_cap=1024, up_cap=2048, max_slots=30_000)
+FAIL_WINDOW = (0, 2000, 6000)       # one uplink dark for 4000 slots
+
+
+def _rows(proto, scenario, routing, up_loss, r):
+    fl = r["faults"] or {}
+    return dict(
+        protocol=proto, scenario=scenario, routing=routing,
+        up_loss=up_loss,
+        p99_small=round(r["p99_small"] or 0, 2),
+        p50_small=round(r["p50_small"] or 0, 2),
+        completion=round(r["completion_rate"], 3),
+        fault_lost=fl.get("fault_lost_chunks", 0),
+        retx_chunks=fl.get("retx_chunks", 0),
+        recovery_mean=round(fl["recovery_mean_slots"], 1)
+        if fl.get("recovery_mean_slots") is not None else "",
+        recovery_p99=round(fl["recovery_p99_slots"], 1)
+        if fl.get("recovery_p99_slots") is not None else "")
+
+
+def fig_faults(full: bool = False):
+    """Homa vs basic under loss and failure (the resilience figure)."""
+    t = dict(TOPO)
+    rows = []
+    for proto in ("homa", "basic"):
+        # (a) Bernoulli uplink loss sweep, static ECMP routing
+        pts = [dict(workload="W2", load=0.6)]
+        for lr in LOSS_RATES:
+            fab = dict(racks=t["racks"], oversub=t["oversub"],
+                       up_cap=t["up_cap"])
+            if lr > 0:
+                fab["faults"] = dict(up_loss=lr)
+            res = sim_sweep(pts, protocol=proto, fabric=fab,
+                            n_hosts=t["n_hosts"],
+                            n_messages=t["n_messages"],
+                            ring_cap=t["ring_cap"],
+                            max_slots=t["max_slots"])
+            rows.append(_rows(proto, "loss", "ecmp", lr, res[0]))
+        # (b) single-uplink failure window, routing-policy comparison
+        for routing in ROUTINGS:
+            fab = dict(racks=t["racks"], oversub=t["oversub"],
+                       up_cap=t["up_cap"], routing=routing,
+                       faults=dict(link_fail=[list(FAIL_WINDOW)]))
+            res = sim_sweep(pts, protocol=proto, fabric=fab,
+                            n_hosts=t["n_hosts"],
+                            n_messages=t["n_messages"],
+                            ring_cap=t["ring_cap"],
+                            max_slots=t["max_slots"])
+            rows.append(_rows(proto, "linkfail", routing, 0.0, res[0]))
+    emit("fig_faults", rows)
+    # acceptance shape: homa completes everything at every loss rate,
+    # degrades monotonically-ish, and stays below basic's p99
+    by = {(r["protocol"], r["scenario"], r["routing"], r["up_loss"]): r
+          for r in rows}
+    for lr in LOSS_RATES:
+        h, b = by[("homa", "loss", "ecmp", lr)], \
+            by[("basic", "loss", "ecmp", lr)]
+        assert h["completion"] == 1.0, (lr, h)
+        assert h["p99_small"] <= b["p99_small"], (lr, h, b)
+    return rows
+
+
+def faults_smoke(full: bool = False):
+    """One lossy leaf-spine point end-to-end (the CI cell): homa at 1%
+    uplink loss on W2 at 2:1 oversubscription still completes every
+    message, with retransmission and recovery stats pinned exactly."""
+    pts = [dict(workload="W2", load=0.5)]
+    fab = dict(racks=4, oversub=2.0, faults=dict(up_loss=0.01))
+    res = sim_sweep(pts, protocol="homa", fabric=fab, n_hosts=16,
+                    n_messages=600, ring_cap=512, max_slots=20_000)
+    r = res[0]
+    fl = r["faults"]
+    rows = [dict(protocol="homa", completion=r["completion_rate"],
+                 lost_chunks=r["lost_chunks"],
+                 fault_lost=fl["fault_lost_chunks"],
+                 retx_chunks=fl["retx_chunks"],
+                 msgs_lossy=fl["msgs_lossy"],
+                 recovery_mean=round(fl["recovery_mean_slots"], 1),
+                 recovery_p99=round(fl["recovery_p99_slots"], 1))]
+    emit("faults_smoke", rows)
+    assert r["completion_rate"] == 1.0, rows
+    return rows

@@ -23,6 +23,7 @@ def main() -> None:
     from benchmarks import paper_figs as F
     from benchmarks import collective_sched as C
     from benchmarks import fabric_figs as FF
+    from benchmarks import faults_figs as FL
     from benchmarks.roofline import backend_compare
     from benchmarks.sweep_speed import sweep_speed
 
@@ -32,6 +33,8 @@ def main() -> None:
         "fabric_smoke": FF.fabric_smoke,
         "fabric_oversub": FF.fabric_oversub,
         "fig14_fabric_incast": FF.fig14_fabric_incast,
+        "faults_smoke": FL.faults_smoke,
+        "fig_faults": FL.fig_faults,
         "fig10_incast": F.fig10_incast,
         "fig12_slowdown": F.fig12_slowdown,
         "fig13_median": F.fig13_median,

@@ -123,6 +123,34 @@ def paper_validation():
                      "; ".join(f"n={r['fan_in']}: {r['p99_small']} vs "
                                f"{bw[r['fan_in']]['p99_small']}"
                                for r in hw if r["fan_in"] in bw)))
+    ff = j("fig_faults.json")
+    if ff:
+        by = {(r["protocol"], r["scenario"], r["routing"],
+               r["up_loss"]): r for r in ff}
+        loss_rates = sorted({r["up_loss"] for r in ff
+                             if r["scenario"] == "loss"})
+        rows.append(("Resilience: p99 small vs uplink loss "
+                     "(homa vs basic, ECMP)",
+                     "homa degrades gracefully, stays below basic (§3.7)",
+                     "; ".join(
+                         f"{lr:g}: {by['homa', 'loss', 'ecmp', lr]['p99_small']}"
+                         f" vs {by['basic', 'loss', 'ecmp', lr]['p99_small']}"
+                         for lr in loss_rates)))
+        rows.append(("Resilience: mean recovery slots vs loss "
+                     "(homa vs basic)",
+                     "receiver RESEND beats sender fallback",
+                     "; ".join(
+                         f"{lr:g}: {by['homa', 'loss', 'ecmp', lr]['recovery_mean']}"
+                         f" vs {by['basic', 'loss', 'ecmp', lr]['recovery_mean']}"
+                         for lr in loss_rates if lr > 0)))
+        rows.append(("Resilience: uplink-failure window, p99 small by "
+                     "routing (homa)",
+                     "adaptive < flowlet < ecmp (RepFlow point)",
+                     "; ".join(
+                         f"{rt}: {by['homa', 'linkfail', rt, 0.0]['p99_small']}"
+                         f" (lost={by['homa', 'linkfail', rt, 0.0]['fault_lost']})"
+                         for rt in ("ecmp", "flowlet", "adaptive")
+                         if ("homa", "linkfail", rt, 0.0) in by)))
     sw = j("sweep_speed.json")
     if sw:
         rows.append(("run_sweep vs sequential run_sim (8 seeds)",

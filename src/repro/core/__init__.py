@@ -4,6 +4,7 @@
 from repro.core.sim import (SimConfig, SimResult, simulate, run_sweep,
                             run_sim, slowdown_percentiles)
 from repro.core.fabric import FabricConfig
+from repro.core.faults import FaultConfig
 from repro.core.protocols import (Protocol, SenderPolicy, ReceiverPolicy,
                                   register, get_protocol,
                                   registered_protocols)
@@ -12,7 +13,8 @@ from repro.core import scenarios
 from repro.core.priorities import PriorityAllocation, allocate_priorities
 
 __all__ = [
-    "SimConfig", "SimResult", "FabricConfig", "simulate", "run_sweep",
+    "SimConfig", "SimResult", "FabricConfig", "FaultConfig", "simulate",
+    "run_sweep",
     "run_sim", "slowdown_percentiles",
     "Protocol", "SenderPolicy", "ReceiverPolicy", "register",
     "get_protocol", "registered_protocols",

@@ -47,8 +47,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.protocols import BIG, I32
+from repro.core.faults import (FaultConfig, inject_losses, forward_losses,
+                               link_down_mask, select_uplink)
 from repro.kernels.arbiter import dispatch
 from repro.kernels.arbiter.ref import priority_arbiter_ref
+
+ROUTING_POLICIES = ("ecmp", "flowlet", "adaptive")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,6 +68,19 @@ class FabricConfig:
     spine_delay_slots: int = 6      # uplink service -> dst downlink service
     up_cap: int = 512               # per-uplink buffered chunks
     seed: int = 0                   # spine-hash seed (ECMP placement)
+    # spine selection policy (DESIGN.md §7): "ecmp" is the static
+    # per-message hash (today's behavior); "flowlet" re-hashes every
+    # flowlet_slots; "adaptive" picks the least-loaded live uplink
+    routing: str = "ecmp"
+    flowlet_slots: int = 64         # flowlet epoch length (~1.7 RTT)
+    # fault injection + loss recovery (repro.core.faults); None keeps
+    # the scan loss-free and bit-identical to the pre-fault simulator
+    faults: FaultConfig | None = None
+
+    def __post_init__(self):
+        # JSON round-trip convenience: accept a plain dict for faults
+        if isinstance(self.faults, dict):
+            object.__setattr__(self, "faults", FaultConfig(**self.faults))
 
     @property
     def enabled(self) -> bool:
@@ -90,6 +107,14 @@ class FabricConfig:
                 "cannot traverse uplink and downlink in the same slot)")
         if self.up_cap < 1:
             raise ValueError("FabricConfig.up_cap must be >= 1")
+        if self.routing not in ROUTING_POLICIES:
+            raise ValueError(
+                f"unknown routing policy {self.routing!r}; available: "
+                f"{list(ROUTING_POLICIES)}")
+        if self.flowlet_slots < 1:
+            raise ValueError("FabricConfig.flowlet_slots must be >= 1")
+        if self.faults is not None:
+            self.faults.validate(self, n_hosts)
 
     # ---- derived topology (python ints: shape parameters for the scan)
 
@@ -218,11 +243,18 @@ def route_chunks(cfg, st, S, cm, has, dsts, prio_chunk, now):
     local = has & (src_rack == dst_rack)
     remote = has & (src_rack != dst_rack)
 
+    if fab.routing == "ecmp":
+        urow = src_rack * n_up + S["spine"][cm]
+    else:
+        urow = select_uplink(cfg, st, S, cm, src_rack, now)
+    if fab.faults is not None:
+        local, remote, st = inject_losses(cfg, st, cm, local, remote,
+                                          dsts, urow, now)
+
     r_msg, r_prio, r_seq, r_valid, d_drop = ring_insert(
         st["r_msg"], st["r_prio"], st["r_seq"], st["r_valid"],
         dsts, local, cm, prio_chunk, jnp.full_like(dsts, now))
 
-    urow = src_rack * n_up + S["spine"][cm]
     u_msg, u_prio, u_seq, u_valid, u_drop = ring_insert(
         st["u_msg"], st["u_prio"], st["u_seq"], st["u_valid"],
         urow, remote, cm, prio_chunk, jnp.full_like(urow, now))
@@ -247,6 +279,11 @@ def uplink_drain(cfg, st, S, now):
     U = st["u_valid"].shape[0]
 
     eligible = st["u_valid"] & (st["u_seq"] + fab.leaf_delay_slots <= now)
+    fl = fab.faults
+    if fl is not None and (fl.link_fail or fl.tor_fail):
+        # a failed uplink black-holes its queue for the window: chunks
+        # already buffered there neither drain nor get re-routed
+        eligible = eligible & ~link_down_mask(cfg, now)[:, None]
     slot_idx, any_e, _ = drain_select(st["u_prio"], st["u_seq"], eligible,
                                       backend=cfg.backend,
                                       interpret=cfg.pallas_interpret)
@@ -264,9 +301,14 @@ def uplink_drain(cfg, st, S, now):
     dst = jnp.where(any_e, S["dst"][jnp.minimum(msg, M - 1)], H)
     vseq = jnp.full((U,), now + fab.spine_delay_slots - cfg.net_delay_slots,
                     I32)
+    ins_ok = any_e
+    if fl is not None and (fl.down_loss > 0 or fl.tor_fail):
+        # last-hop loss point: the chunk left the uplink (it still counts
+        # toward u_busy) but dies on the spine->TOR->host leg
+        ins_ok, st = forward_losses(cfg, st, msg, dst, any_e, now)
     r_msg, r_prio, r_seq, r_valid, d_drop = ring_insert(
         st["r_msg"], st["r_prio"], st["r_seq"], st["r_valid"],
-        dst, any_e, msg, prio, vseq)
+        dst, ins_ok, msg, prio, vseq)
 
     qlen = eligible.sum(axis=1) - any_e.astype(I32)
     return {**st,
@@ -278,6 +320,6 @@ def uplink_drain(cfg, st, S, now):
             "u_q_max": jnp.maximum(st["u_q_max"], qlen)}
 
 
-__all__ = ["FabricConfig", "spine_hash", "ring_insert",
-           "ring_drain_select", "drain_select", "init_fabric_state",
-           "route_chunks", "uplink_drain"]
+__all__ = ["FabricConfig", "FaultConfig", "ROUTING_POLICIES", "spine_hash",
+           "ring_insert", "ring_drain_select", "drain_select",
+           "init_fabric_state", "route_chunks", "uplink_drain"]

@@ -1,0 +1,359 @@
+"""Fault injection, loss recovery, and spine routing (DESIGN.md §7).
+
+The paper's loss-recovery machinery (§3.7: receivers detect missing data
+and request RESENDs; senders retransmit) only matters on a fabric that
+can actually lose packets.  This module makes the leaf-spine tier lossy
+and failure-prone, and gives every registered protocol a way to survive
+it, as three composable pieces configured on :class:`FabricConfig`:
+
+**1. Loss & failure injection** (:class:`FaultConfig`)
+  - Bernoulli per-chunk loss on the TOR uplinks (``up_loss``, the
+    host→spine leg) and at the destination downlink enqueue
+    (``down_loss``, the last-hop leg — also covers intra-rack chunks,
+    so ``racks=1`` gives a lossy single switch).
+  - Gilbert–Elliott burst loss per uplink: a two-state Markov chain
+    (good↔bad, transition probabilities ``ge_p_gb``/``ge_p_bg`` per
+    slot) adds ``ge_loss`` to the drop probability while the link is in
+    the bad state — loss arrives in bursts, the regime that defeats
+    naive FEC and stresses timeout-based recovery.
+  - Scheduled failure windows: ``link_fail=((uplink, start, end), ...)``
+    takes one TOR uplink down for ``[start, end)``; ``tor_fail=((rack,
+    start, end), ...)`` takes a whole TOR down — its uplinks drop
+    everything, its hosts' downlinks neither accept nor drain chunks,
+    and chunks transmitted *by* the rack's hosts die at the dead TOR.
+
+  All randomness is a counter-based integer hash of ``(link, slot,
+  seed)`` — no PRNG state threads the scan, draws are independent
+  across retransmission rounds, and runs are bit-reproducible on both
+  compute backends and under ``run_sweep``'s vmap.
+
+**2. Loss recovery** (:func:`apply_recovery` + the
+:meth:`ReceiverPolicy.resend <repro.core.protocols.ReceiverPolicy>`
+hook)
+  Chunks in this simulator are fungible slots of a message, so "sender
+  retransmits lost packet" becomes "sender rewinds its send offset to
+  what the receiver has": a RESEND rewinds ``sent`` to ``recv`` and
+  credits the difference to a per-message ``retx`` counter (so chunk
+  conservation — transmissions = ``sent + retx`` — still balances).
+  Two timers drive it, both keyed off the last slot a chunk of the
+  message arrived (or the last rewind — retransmissions get a full
+  quiet period before firing again):
+
+  - *receiver RESEND* (paper §3.7): receivers that actively schedule
+    (Homa's and pHost's ``OvercommitSrptReceiver``) resend-poll any
+    *known* incomplete message quiet for ``resend_slots``.
+  - *sender fallback timeout*: every protocol rewinds a quiet message
+    after ``sender_timeout_slots`` (≫ ``resend_slots``), covering the
+    window-receiver baselines and the case where every unscheduled
+    chunk was lost and the receiver never learned of the message.
+
+  A rewind can race chunks still queued in the fabric; those arrive as
+  duplicates, which in the fungible-chunk model are just wasted
+  bandwidth (counted — they inflate ``retx``), never corruption.
+
+**3. Spine routing** (``FabricConfig.routing``)
+  - ``"ecmp"`` — today's behavior, untouched: a static per-message hash
+    (computed in ``prepare``) that is oblivious to failures, so chunks
+    keep dying on a failed uplink until its window ends.
+  - ``"flowlet"`` — the per-message hash is re-salted with a time epoch
+    (``now // flowlet_slots``), so a flow pinned to a dead or congested
+    uplink escapes at the next epoch boundary.
+  - ``"adaptive"`` — per-slot least-loaded selection: each rack routes
+    this slot's cross-rack chunks to its uplink with the smallest queue
+    occupancy, with failed uplinks masked out — reacts immediately to
+    both congestion and failures.
+
+``FabricConfig.faults=None`` (the default) keeps the scan free of every
+array and op defined here: the zero-fault program is bit-identical to
+the pre-fault simulator (pinned by the fabric goldens on both
+backends).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core.protocols import BIG, I32
+
+_U32 = jnp.uint32
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Loss/failure/recovery parameters (hashable: rides the jit-static
+    :class:`FabricConfig`). All probabilities are per chunk per slot."""
+    up_loss: float = 0.0            # Bernoulli loss at TOR uplink enqueue
+    down_loss: float = 0.0          # Bernoulli loss at downlink enqueue
+    ge_p_gb: float = 0.0            # Gilbert-Elliott good->bad per slot
+    ge_p_bg: float = 0.05           # Gilbert-Elliott bad->good per slot
+    ge_loss: float = 0.5            # extra uplink loss while in bad state
+    # scheduled failure windows, half-open [start, end) in slots:
+    link_fail: tuple[tuple[int, int, int], ...] = ()   # (uplink, s, e)
+    tor_fail: tuple[tuple[int, int, int], ...] = ()    # (rack, s, e)
+    # recovery timers (slots of quiet before firing; see module doc).
+    # Deliberately conservative — many RTTs, like real Homa's resend
+    # ticker: an oversubscribed uplink queue can delay a chunk for
+    # hundreds of slots, and a timer shorter than that mistakes
+    # queueing for loss and rewinds in-flight data, a duplicate storm
+    # that amplifies the very congestion that triggered it.
+    resend_slots: int = 300          # receiver RESEND (~8 RTT)
+    sender_timeout_slots: int = 760  # sender fallback (~20 RTT)
+    seed: int = 0                   # loss-draw hash seed
+
+    def __post_init__(self):
+        # normalize JSON-deserialized lists into hashable tuples
+        object.__setattr__(self, "link_fail", tuple(
+            tuple(int(v) for v in w) for w in self.link_fail))
+        object.__setattr__(self, "tor_fail", tuple(
+            tuple(int(v) for v in w) for w in self.tor_fail))
+
+    @property
+    def ge_on(self) -> bool:
+        return self.ge_p_gb > 0
+
+    @property
+    def any_loss(self) -> bool:
+        return (self.up_loss > 0 or self.down_loss > 0 or self.ge_on
+                or bool(self.link_fail) or bool(self.tor_fail))
+
+    def validate(self, fab, n_hosts: int) -> None:
+        for name in ("up_loss", "down_loss", "ge_loss"):
+            p = getattr(self, name)
+            if not 0.0 <= p <= 1.0:
+                raise ValueError(f"FaultConfig.{name} must be a "
+                                 f"probability in [0, 1], got {p}")
+        if not 0.0 <= self.ge_p_gb <= 1.0 or not 0.0 <= self.ge_p_bg <= 1.0:
+            raise ValueError("FaultConfig.ge_p_gb/ge_p_bg must be "
+                             "probabilities in [0, 1]")
+        if self.ge_on and self.ge_p_bg <= 0:
+            raise ValueError(
+                "FaultConfig.ge_p_bg must be > 0 when ge_p_gb > 0: a "
+                "bad link that can never recover black-holes its spine "
+                "forever (use a link_fail window for permanent failure)")
+        if self.resend_slots < 1 or self.sender_timeout_slots < 1:
+            raise ValueError("FaultConfig recovery timeouts must be >= 1 "
+                             "slot")
+        U = fab.n_uplinks_total(n_hosts)
+        for w in self.link_fail:
+            if len(w) != 3 or not (0 <= w[0] < U) or w[1] < 0 \
+                    or w[2] <= w[1]:
+                raise ValueError(
+                    f"FaultConfig.link_fail window {w!r} must be "
+                    f"(uplink in [0, {U}), start >= 0, end > start)")
+        for w in self.tor_fail:
+            if len(w) != 3 or not (0 <= w[0] < fab.racks) or w[1] < 0 \
+                    or w[2] <= w[1]:
+                raise ValueError(
+                    f"FaultConfig.tor_fail window {w!r} must be "
+                    f"(rack in [0, {fab.racks}), start >= 0, end > start)")
+
+
+# ------------------------------------------------ counter-based hashing ----
+# One uniform draw per (row, slot): an xorshift-multiply mix, the in-scan
+# (jnp, traced-``now``) sibling of ``fabric.spine_hash``. Distinct draw
+# sites mix a distinct salt into the seed so co-indexed draws (e.g. the
+# per-uplink GE transition and the per-uplink forward-loss draw in the
+# same slot) stay independent.
+
+_SALT_CHUNK = 0x1B56C4E9     # per-host transmit-chunk loss draw
+_SALT_GE = 0x60BEE0D1        # per-uplink Gilbert-Elliott transition
+_SALT_FWD = 0x7FEB352D       # per-uplink spine->downlink loss draw
+_SALT_FLOWLET = 0x46D9F3B3   # flowlet epoch re-hash
+
+
+def _hash_u32(a, b, seed: int, salt: int):
+    h = (jnp.asarray(a).astype(_U32) * _U32(0x9E3779B1)
+         ^ jnp.asarray(b).astype(_U32) * _U32(0x85EBCA77)
+         ^ _U32(((seed * 0x27D4EB2F) ^ salt) & 0xFFFFFFFF))
+    h ^= h >> _U32(15)
+    h *= _U32(0x2C1B3C6D)
+    h ^= h >> _U32(13)
+    h *= _U32(0x297A2D39)
+    h ^= h >> _U32(16)
+    return h
+
+
+def _uniform01(a, b, seed: int, salt: int):
+    """Deterministic uniforms in [0, 1) keyed by (a, b, seed, salt)."""
+    return _hash_u32(a, b, seed, salt).astype(jnp.float32) \
+        * jnp.float32(2.0 ** -32)
+
+
+# ---------------------------------------------------- failure windows ------
+
+def link_down_mask(cfg, now):
+    """(U,) bool: uplinks inside a ``link_fail`` window or belonging to a
+    TOR inside a ``tor_fail`` window."""
+    fab = cfg.fabric
+    fl = fab.faults
+    U = fab.n_uplinks_total(cfg.n_hosts)
+    n_up = fab.n_uplinks(cfg.n_hosts)
+    rows = jnp.arange(U, dtype=I32)
+    down = jnp.zeros((U,), bool)
+    for (u, s, e) in fl.link_fail:
+        down |= (rows == u) & (now >= s) & (now < e)
+    for (r, s, e) in fl.tor_fail:
+        down |= (rows // n_up == r) & (now >= s) & (now < e)
+    return down
+
+
+def host_down_mask(cfg, now):
+    """(H,) bool: hosts whose TOR is inside a ``tor_fail`` window — their
+    downlinks neither accept nor drain chunks, and chunks they transmit
+    die at the dead TOR."""
+    fab = cfg.fabric
+    fl = fab.faults
+    H = cfg.n_hosts
+    rs = fab.rack_size(H)
+    hosts = jnp.arange(H, dtype=I32)
+    down = jnp.zeros((H,), bool)
+    for (r, s, e) in fl.tor_fail:
+        down |= (hosts // rs == r) & (now >= s) & (now < e)
+    return down
+
+
+# ------------------------------------------------------- scan state --------
+
+def init_fault_state(cfg, M: int) -> dict:
+    """Fault/recovery scan state; only fault-enabled configs carry it."""
+    U = cfg.fabric.n_uplinks_total(cfg.n_hosts)
+    z = lambda shape: jnp.zeros(shape, I32)  # noqa: E731
+    return {
+        "retx": z((M,)),                    # chunks re-credited by rewinds
+        "msg_lost": z((M,)),                # fault-dropped chunks per msg
+        "first_loss": jnp.full((M,), BIG, I32),
+        "last_arr": z((M,)),                # last slot a chunk drained
+        "last_rw": z((M,)),                 # last rewind slot (backoff)
+        "f_lost": z(()),                    # total fault-dropped chunks
+        "ge_bad": jnp.zeros((U,), bool),    # Gilbert-Elliott link state
+    }
+
+
+def _record_drops(st, cm, dropped, now):
+    """Account fault drops: per-message counts, first-loss slot, total."""
+    return {**st,
+            "msg_lost": st["msg_lost"].at[cm].add(
+                dropped.astype(I32), mode="drop"),
+            "first_loss": st["first_loss"].at[cm].min(
+                jnp.where(dropped, now, BIG), mode="drop"),
+            "f_lost": st["f_lost"] + dropped.sum()}
+
+
+# -------------------------------------------------------- loss points ------
+
+def inject_losses(cfg, st, cm, local, remote, dsts, urow, now):
+    """Apply the transmit-side loss points to this slot's chunks: link /
+    TOR failure drops, Bernoulli uplink + downlink loss, and
+    Gilbert-Elliott burst loss on the chosen uplink. ``local`` /
+    ``remote`` are the per-host insert masks from ``route_chunks``;
+    returns the thinned masks plus updated state."""
+    fl = cfg.fabric.faults
+    H = cfg.n_hosts
+    hosts = jnp.arange(H, dtype=I32)
+    dstc = jnp.minimum(dsts, H - 1)
+
+    st = advance_ge(cfg, st, now)
+    host_down = host_down_mask(cfg, now)
+    link_down = link_down_mask(cfg, now)
+
+    u = _uniform01(hosts, now, fl.seed, _SALT_CHUNK)
+    p_up = jnp.float32(fl.up_loss)
+    if fl.ge_on:
+        p_up = p_up + jnp.where(st["ge_bad"][urow],
+                                jnp.float32(fl.ge_loss), 0.0)
+    drop_local = local & (host_down[hosts] | host_down[dstc]
+                          | (u < fl.down_loss))
+    drop_remote = remote & (host_down[hosts] | link_down[urow]
+                            | (u < p_up))
+    dropped = drop_local | drop_remote
+    st = _record_drops(st, cm, dropped, now)
+    return local & ~drop_local, remote & ~drop_remote, st
+
+
+def advance_ge(cfg, st, now):
+    """One Gilbert-Elliott transition per uplink per slot (no-op unless
+    the chain is enabled)."""
+    fl = cfg.fabric.faults
+    if not fl.ge_on:
+        return st
+    U = st["ge_bad"].shape[0]
+    ug = _uniform01(jnp.arange(U, dtype=I32), now, fl.seed, _SALT_GE)
+    bad = st["ge_bad"]
+    return {**st, "ge_bad": jnp.where(bad, ug >= fl.ge_p_bg,
+                                      ug < fl.ge_p_gb)}
+
+
+def forward_losses(cfg, st, msg, dst, any_e, now):
+    """Loss point for chunks leaving an uplink toward the destination
+    downlink (the spine→TOR→host leg): ``down_loss`` Bernoulli drops
+    plus dead-destination drops. Returns the thinned insert mask."""
+    fl = cfg.fabric.faults
+    H = cfg.n_hosts
+    U = dst.shape[0]
+    host_down = host_down_mask(cfg, now)
+    uf = _uniform01(jnp.arange(U, dtype=I32), now, fl.seed, _SALT_FWD)
+    dropf = any_e & (host_down[jnp.minimum(dst, H - 1)]
+                     | (uf < fl.down_loss))
+    st = _record_drops(st, msg, dropf, now)
+    return any_e & ~dropf, st
+
+
+# ----------------------------------------------------- spine routing -------
+
+def select_uplink(cfg, st, S, cm, src_rack, now):
+    """(H,) absolute uplink row for each host's chosen chunk under the
+    non-ECMP routing policies (``route_chunks`` keeps the static ECMP
+    path inline so the default program is untouched)."""
+    fab = cfg.fabric
+    n_up = fab.n_uplinks(cfg.n_hosts)
+    if fab.routing == "flowlet":
+        # per-message hash re-salted every flowlet_slots: a flow pinned
+        # to a dead or congested spine escapes at the epoch boundary
+        epoch = now // fab.flowlet_slots
+        spine = (_hash_u32(cm, epoch, fab.seed, _SALT_FLOWLET)
+                 % _U32(n_up)).astype(I32)
+    elif fab.routing == "adaptive":
+        # least-loaded uplink of the sender's rack this slot; failed
+        # uplinks are masked out so routing reacts to failures at once
+        occ = st["u_valid"].sum(axis=1).astype(I32)
+        if fab.faults is not None:
+            occ = jnp.where(link_down_mask(cfg, now), BIG, occ)
+        best = jnp.argmin(occ.reshape(fab.racks, n_up), axis=1) \
+            .astype(I32)                        # ties -> lowest uplink
+        spine = best[src_rack]
+    else:  # pragma: no cover - guarded by FabricConfig.validate
+        raise ValueError(f"unknown routing policy {fab.routing!r}")
+    return src_rack * n_up + spine
+
+
+# ----------------------------------------------------- loss recovery -------
+
+def apply_recovery(cfg, proto, st, S, now, drained_msg, any_elig):
+    """End-of-slot loss recovery (module doc, piece 2): refresh each
+    message's last-arrival clock from this slot's drain, then rewind
+    ``sent`` to ``recv`` for every message whose quiet period tripped
+    the receiver's RESEND hook or the sender fallback timeout."""
+    fl = cfg.fabric.faults
+    M = S["size"].shape[0]
+    last_arr = st["last_arr"].at[jnp.minimum(drained_msg, M - 1)].max(
+        jnp.where(any_elig, now, 0), mode="drop")
+
+    missing = (S["arrival"] <= now) & (st["completion"] < 0) \
+        & (st["sent"] > st["recv"])
+    ref_t = jnp.maximum(jnp.maximum(last_arr, st["last_rw"]), S["arrival"])
+    quiet = now - ref_t
+    known = st["recv"] > 0
+    resend = proto.receiver.resend(cfg, st, S, now, known, quiet)
+    rw = missing & (resend | (quiet >= fl.sender_timeout_slots))
+    rewound = jnp.where(rw, st["sent"] - st["recv"], 0)
+    return {**st,
+            "last_arr": last_arr,
+            "sent": jnp.where(rw, st["recv"], st["sent"]),
+            "retx": st["retx"] + rewound,
+            "last_rw": jnp.where(rw, now, st["last_rw"])}
+
+
+__all__ = ["FaultConfig", "link_down_mask", "host_down_mask",
+           "init_fault_state", "inject_losses", "advance_ge",
+           "forward_losses", "select_uplink", "apply_recovery"]

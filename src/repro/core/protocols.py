@@ -114,6 +114,16 @@ class ReceiverPolicy:
         with known-but-ungranted traffic (wasted-bandwidth accounting)."""
         raise NotImplementedError
 
+    def resend(self, cfg, st, S, now, known, quiet):
+        """Receiver-side loss detection (paper §3.7): (M,) bool mask of
+        messages whose sender should rewind to the receiver's high-water
+        mark this slot. ``known`` marks messages the receiver has heard
+        from (recv > 0); ``quiet`` is slots since the last chunk arrival
+        (or rewind). Only called on fault-enabled fabrics; the default
+        leaves recovery entirely to the sender fallback timeout — the
+        honest model for window baselines with no receiver scheduler."""
+        return jnp.zeros_like(known)
+
 
 def window_grants(cfg, st, S, gate):
     """Shared helper: keep ``gate``-ed messages granted one RTT of data
@@ -203,6 +213,13 @@ class OvercommitSrptReceiver(ReceiverPolicy):
         if self.stall_aware:
             eligible = eligible & (st["stall_until"] <= now)
         return topk_srpt_grants(cfg, st, S, eligible, K, n_sched)
+
+    def resend(self, cfg, st, S, now, known, quiet):
+        # Homa's receiver timeout (paper §3.7): a receiver that actively
+        # schedules its inbound messages RESENDs any known message that
+        # has gone quiet for ~2 RTT — much faster than the sender
+        # fallback, which is the point of receiver-driven recovery.
+        return known & (quiet >= cfg.fabric.faults.resend_slots)
 
 
 # ------------------------------------------------------------- protocols ---

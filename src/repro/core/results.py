@@ -74,6 +74,12 @@ class SimResult:
     tor_up_q_mean_bytes: np.ndarray | None = None
     tor_up_q_max_bytes: np.ndarray | None = None
     tor_up_lost_chunks: int = 0
+    # fault-injection layer (None / zero when faults were disabled):
+    faults: dict | None = None       # FaultConfig echo (loss rates, windows)
+    retx_chunks: np.ndarray | None = None      # (M,) rewound-chunk credits
+    msg_lost_chunks: np.ndarray | None = None  # (M,) fault-dropped chunks
+    recovery_slots: np.ndarray | None = None   # (M,) first loss -> done; -1
+    fault_lost_chunks: int = 0       # total chunks dropped by fault injection
     # optional raw scan state (return_state=True)
     state: dict | None = None
     static: dict | None = None
@@ -122,6 +128,21 @@ class SimResult:
                 "up_q_max_bytes": float(np.max(self.tor_up_q_max_bytes)),
                 "up_lost_chunks": int(self.tor_up_lost_chunks),
             }
+        faults = None
+        if self.faults is not None:
+            rec = self.recovery_slots
+            hit = rec >= 0          # fault-affected messages that finished
+            faults = {
+                **{k: list(v) if isinstance(v, tuple) else v
+                   for k, v in self.faults.items()},
+                "fault_lost_chunks": int(self.fault_lost_chunks),
+                "retx_chunks": int(np.sum(self.retx_chunks)),
+                "msgs_lossy": int(np.sum(self.msg_lost_chunks > 0)),
+                "recovery_mean_slots": float(np.mean(rec[hit]))
+                if hit.any() else None,
+                "recovery_p99_slots": float(np.percentile(rec[hit], 99))
+                if hit.any() else None,
+            }
         return {
             "protocol": self.protocol,
             "n_complete": int(self.n_complete),
@@ -143,6 +164,7 @@ class SimResult:
             "p99_all": self.percentile(pct, ok),
             "p50_all": self.percentile(50, ok),
             "fabric": fabric,
+            "faults": faults,
         }
 
     def to_json(self, **kwargs) -> str:

@@ -17,11 +17,22 @@ paper's evaluation plus the classic fabric stress patterns:
                TOR-uplink oversubscription stressor.
 
 All generators are deterministic in ``seed``.
+
+Failure scenarios (DESIGN.md §7) live on the *fabric* axis instead: the
+``lossy_fabric`` / ``uplink_failure`` / ``tor_failure`` helpers attach a
+:class:`~repro.core.faults.FaultConfig` to an existing
+:class:`~repro.core.fabric.FabricConfig`, so any traffic scenario above
+composes with any failure scenario by pairing a table with a faulted
+fabric.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
+from repro.core.fabric import FabricConfig
+from repro.core.faults import FaultConfig
 from repro.core.workloads import MessageTable, make_messages
 
 
@@ -136,4 +147,46 @@ def shuffle(*, n_hosts: int, bytes_per_pair: int, slot_bytes: int = 256,
                         arr.astype(np.int32), "shuffle", 1.0, slot_bytes)
 
 
-__all__ = ["incast", "hotspot", "shuffle", "merge_tables"]
+# ------------------------------------------------- failure scenarios ------
+
+def _with_faults(fab: FabricConfig, **fault_kw) -> FabricConfig:
+    if not fab.enabled:
+        raise ValueError("failure scenarios need an enabled fabric "
+                         "(FabricConfig with racks set): faults model "
+                         "loss on leaf-spine links")
+    base = dataclasses.asdict(fab.faults) if fab.faults is not None else {}
+    return dataclasses.replace(fab, faults=FaultConfig(**{**base,
+                                                          **fault_kw}))
+
+
+def lossy_fabric(fab: FabricConfig, *, up_loss: float = 0.0,
+                 down_loss: float = 0.0, ge_p_gb: float = 0.0,
+                 ge_p_bg: float = 0.05, ge_loss: float = 0.5,
+                 seed: int = 0) -> FabricConfig:
+    """Steady-state lossy links: Bernoulli uplink/downlink chunk loss,
+    optionally with a Gilbert-Elliott burst component."""
+    return _with_faults(fab, up_loss=up_loss, down_loss=down_loss,
+                        ge_p_gb=ge_p_gb, ge_p_bg=ge_p_bg, ge_loss=ge_loss,
+                        seed=seed)
+
+
+def uplink_failure(fab: FabricConfig, *, uplink: int, start: int,
+                   end: int) -> FabricConfig:
+    """One TOR uplink black-holes all traffic for ``[start, end)`` slots
+    — the scenario where routing policy dominates: static ECMP keeps
+    hashing flows into the dead spine until the window lifts."""
+    prior = fab.faults.link_fail if fab.faults is not None else ()
+    return _with_faults(fab, link_fail=prior + ((uplink, start, end),))
+
+
+def tor_failure(fab: FabricConfig, *, rack: int, start: int,
+                end: int) -> FabricConfig:
+    """A whole TOR fails for ``[start, end)`` slots: the rack's uplinks
+    and host downlinks all go dark; recovery timeouts must carry every
+    in-flight message across the window."""
+    prior = fab.faults.tor_fail if fab.faults is not None else ()
+    return _with_faults(fab, tor_fail=prior + ((rack, start, end),))
+
+
+__all__ = ["incast", "hotspot", "shuffle", "merge_tables",
+           "lossy_fabric", "uplink_failure", "tor_failure"]

@@ -60,6 +60,8 @@ from repro.core.protocols import (Protocol, get_protocol,
 from repro.core.fabric import (FabricConfig, spine_hash, ring_insert,
                                drain_select, init_fabric_state,
                                route_chunks, uplink_drain)
+from repro.core.faults import (FaultConfig, init_fault_state,
+                               apply_recovery, host_down_mask)
 from repro.core.results import SimResult, bucketed_percentiles
 from repro.kernels.arbiter.dispatch import resolve_backend, \
     resolve_interpret
@@ -105,6 +107,14 @@ class SimConfig:
         """True iff the leaf-spine tier is modeled (``FabricConfig(None)``
         and ``fabric=None`` both mean the single-switch fast path)."""
         return self.fabric is not None and self.fabric.enabled
+
+    @property
+    def faults_on(self) -> bool:
+        """True iff the fault/recovery layer is active (DESIGN.md §7).
+        Faults hang off the fabric tier; ``fabric.faults=None`` (the
+        default) keeps the scan loss-free and bit-identical to the
+        pre-fault simulator."""
+        return self.fabric_on and self.fabric.faults is not None
 
 
 def _to_slots(nbytes: np.ndarray, slot_bytes: int) -> np.ndarray:
@@ -170,6 +180,7 @@ def _init_state(cfg: SimConfig, proto: Protocol, M: int):
     return {
         **proto.extra_state(cfg, M),          # protocol-private carry
         **(init_fabric_state(cfg) if cfg.fabric_on else {}),
+        **(init_fault_state(cfg, M) if cfg.faults_on else {}),
         "sent": z((M,)),
         "granted_s": z((M,)),                 # sender-visible grant (slots)
         "grant_r": z((M,)),                   # receiver-issued grant (slots)
@@ -266,6 +277,10 @@ def step_fn(cfg: SimConfig, proto: Protocol, S, n_sched: int, st, now):
     # (backend-dispatched: cfg.backend="pallas" runs the priority_arbiter
     # kernel, bit-identical to the reference math — DESIGN.md §6)
     eligible = st["r_valid"] & (st["r_seq"] + cfg.net_delay_slots <= now)
+    if cfg.faults_on and cfg.fabric.faults.tor_fail:
+        # hosts behind a failed TOR drain nothing for the window; their
+        # buffered chunks survive and resume draining when it lifts
+        eligible = eligible & ~host_down_mask(cfg, now)[:, None]
     slot_idx, any_elig, pmin = drain_select(st["r_prio"], st["r_seq"],
                                             eligible, backend=cfg.backend,
                                             interpret=cfg.pallas_interpret)
@@ -295,6 +310,12 @@ def step_fn(cfg: SimConfig, proto: Protocol, S, n_sched: int, st, now):
           "q_sum": st["q_sum"] + qlen.astype(jnp.float32),
           "q_max": jnp.maximum(st["q_max"], qlen),
           "wasted": wasted, "prio_drained": prio_drained}
+
+    # ---- 5b. loss recovery (fault-enabled fabrics only, DESIGN.md §7):
+    # receiver RESENDs + sender fallback timeouts rewind quiet messages'
+    # send offsets so fault-dropped chunks get retransmitted
+    if cfg.faults_on:
+        st = apply_recovery(cfg, proto, st, S, now, drained_msg, any_elig)
 
     # ---- 6. protocol end-of-slot hook (e.g. pHost sender timeouts)
     st = proto.post_step(cfg, st, S, now, active, drained_msg, any_elig)
@@ -349,13 +370,28 @@ def _finalize(cfg: SimConfig, table: MessageTable, S, alloc, st,
         fabric = {"racks": fab.racks,
                   "rack_size": fab.rack_size(cfg.n_hosts),
                   "n_uplinks": fab.n_uplinks(cfg.n_hosts),
-                  "oversub": fab.oversub, "seed": fab.seed}
+                  "oversub": fab.oversub, "seed": fab.seed,
+                  "routing": fab.routing}
         tor_kw = dict(
             tor_up_busy_frac=st["u_busy"] / cfg.max_slots,
             tor_up_q_mean_bytes=st["u_q_sum"] / cfg.max_slots
             * cfg.slot_bytes,
             tor_up_q_max_bytes=st["u_q_max"] * cfg.slot_bytes,
             tor_up_lost_chunks=int(st["u_lost"]))
+    if cfg.faults_on:
+        fl = cfg.fabric.faults
+        first_loss = np.asarray(st["first_loss"])
+        affected = first_loss < 2 ** 30
+        # recovery time: first fault-drop on the message -> completion;
+        # -1 for messages never hit (or never finished)
+        tor_kw.update(
+            faults=dataclasses.asdict(fl),
+            retx_chunks=np.asarray(st["retx"]),
+            msg_lost_chunks=np.asarray(st["msg_lost"]),
+            recovery_slots=np.where(done & affected,
+                                    np.asarray(st["completion"])
+                                    - first_loss, -1),
+            fault_lost_chunks=int(st["f_lost"]))
 
     return SimResult(
         protocol=cfg.protocol, alloc=alloc,

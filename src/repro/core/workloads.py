@@ -29,7 +29,12 @@ WORKLOAD_BINS: dict[str, list[tuple[float, int, int]]] = {
 
 def sample_sizes(workload: str, n: int, rng: np.random.Generator,
                  max_bytes: int | None = None) -> np.ndarray:
-    bins = WORKLOAD_BINS[workload]
+    try:
+        bins = WORKLOAD_BINS[workload]
+    except KeyError:
+        raise ValueError(
+            f"unknown workload {workload!r}; available workloads: "
+            f"{sorted(WORKLOAD_BINS)}") from None
     ps = np.array([b[0] for b in bins])
     ps = ps / ps.sum()
     which = rng.choice(len(bins), size=n, p=ps)

@@ -1,0 +1,356 @@
+"""Fault-injection & loss-recovery subsystem tests (DESIGN.md §7).
+
+Covers the three tentpole pieces — loss/failure injection, Homa-style
+receiver RESEND + sender-fallback recovery, and the pluggable spine
+routing policies — plus the satellites: loss-aware conservation for
+every protocol, retransmission liveness as a hypothesis property over
+ragged shapes, and the workload-name validation fix.
+
+Zero-fault bit-identity is pinned elsewhere (tests/test_fabric.py and
+tests/test_backend.py against the goldens): ``FabricConfig.faults=None``
+keeps those tests running the exact pre-fault program.
+"""
+import dataclasses
+import functools
+import json
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st_
+
+from repro.core import (SimConfig, FabricConfig, FaultConfig, simulate,
+                        run_sweep, make_messages, scenarios)
+from repro.core.faults import link_down_mask, host_down_mask
+
+ALL_PROTOS = ["homa", "basic", "phost", "pias", "pfabric", "ndp"]
+
+
+def _conserved(state) -> bool:
+    """Loss-aware chunk conservation: every transmission (sent + rewind
+    credits) is delivered, buffered in some tier, or accounted as lost
+    (ring overflow at either tier, or fault-injected drop)."""
+    return (int(state["sent"].sum()) + int(state["retx"].sum())
+            == int(state["recv"].sum()) + int(state["r_valid"].sum())
+            + int(state["u_valid"].sum()) + int(state["lost"])
+            + int(state["u_lost"]) + int(state["f_lost"]))
+
+
+@functools.lru_cache(maxsize=None)
+def _loss_run(proto: str):
+    """The acceptance-criterion run: W2 at 2:1 oversubscription with 1%
+    uplink loss (shared across tests; jit-cached within the session)."""
+    tbl = make_messages("W2", n_hosts=16, load=0.6, n_messages=250,
+                        slot_bytes=256, seed=3)
+    fab = FabricConfig(racks=4, oversub=2.0,
+                       faults=FaultConfig(up_loss=0.01))
+    cfg = SimConfig(n_hosts=16, protocol=proto, fabric=fab,
+                    max_slots=20_000, ring_cap=1024)
+    return simulate(cfg, tbl, return_state=True)
+
+
+# ------------------------------------------ acceptance + conservation ----
+
+@pytest.mark.parametrize("proto", ALL_PROTOS)
+def test_all_protocols_complete_and_conserve_at_one_percent_loss(proto):
+    """Acceptance: with 1% uplink loss on W2 at 2:1 oversub, every
+    protocol recovers every message; and the conservation invariant
+    holds under loss (satellite): delivered + buffered + dropped
+    balances sent + retransmission credits exactly."""
+    r = _loss_run(proto)
+    assert r.n_complete == r.n_messages, (proto, r.n_complete)
+    assert r.fault_lost_chunks > 0                  # loss actually happened
+    assert int(np.sum(r.retx_chunks)) >= r.fault_lost_chunks
+    assert _conserved(r.state), proto
+
+
+def test_receiver_resend_recovers_faster_than_sender_fallback():
+    """The point of §3.7: homa's receiver RESEND (~8 RTT quiet) beats
+    basic's sender-only fallback timeout (~20 RTT) on mean recovery
+    time for the same table and loss pattern."""
+    rec = {}
+    for proto in ("homa", "basic"):
+        r = _loss_run(proto)
+        hit = r.recovery_slots >= 0
+        assert hit.any(), proto
+        rec[proto] = float(np.mean(r.recovery_slots[hit]))
+    assert rec["homa"] < rec["basic"], rec
+
+
+def test_loss_on_both_legs_with_bursts_conserves():
+    """Bernoulli up+down loss plus a Gilbert-Elliott burst chain at
+    once: heavier, correlated loss still conserves and completes."""
+    tbl = make_messages("W2", n_hosts=8, load=0.5, n_messages=150,
+                        slot_bytes=256, seed=7)
+    fab = FabricConfig(racks=2, oversub=2.0, faults=FaultConfig(
+        up_loss=0.03, down_loss=0.02, ge_p_gb=0.01, ge_p_bg=0.1,
+        ge_loss=0.5))
+    cfg = SimConfig(n_hosts=8, protocol="homa", fabric=fab,
+                    max_slots=20_000, ring_cap=512)
+    r = simulate(cfg, tbl, return_state=True)
+    assert r.n_complete == r.n_messages
+    assert r.fault_lost_chunks > 0
+    assert _conserved(r.state)
+
+
+def test_ge_chain_disabled_by_default():
+    """ge_p_gb=0 must never enter the bad state: a config with only the
+    GE knobs left at defaults injects no loss at all."""
+    tbl = make_messages("W1", n_hosts=8, load=0.5, n_messages=100,
+                        slot_bytes=256, seed=1)
+    fab = FabricConfig(racks=2, faults=FaultConfig())
+    cfg = SimConfig(n_hosts=8, protocol="homa", fabric=fab,
+                    max_slots=6000, ring_cap=512)
+    r = simulate(cfg, tbl)
+    assert r.fault_lost_chunks == 0
+    assert not FaultConfig().any_loss
+
+
+# ------------------------------------------------------ failure windows ----
+
+def test_down_masks_follow_schedules():
+    fab = FabricConfig(racks=4, oversub=2.0, faults=FaultConfig(
+        link_fail=((1, 100, 200),), tor_fail=((2, 150, 250),)))
+    cfg = SimConfig(n_hosts=16, protocol="homa", fabric=fab)
+    U = fab.n_uplinks_total(16)             # 4 racks x 2 uplinks
+    assert U == 8
+    assert not np.asarray(link_down_mask(cfg, 99)).any()
+    m = np.asarray(link_down_mask(cfg, 150))
+    # uplink 1 (window) + rack 2's uplinks 4,5 (TOR window) are down
+    assert m.tolist() == [False, True, False, False, True, True,
+                          False, False]
+    assert not np.asarray(link_down_mask(cfg, 200))[1]
+    h = np.asarray(host_down_mask(cfg, 160))
+    assert h.tolist() == [False] * 8 + [True] * 4 + [False] * 4
+    assert not np.asarray(host_down_mask(cfg, 250)).any()
+
+
+def test_tor_failure_window_recovers():
+    """A whole TOR dark for 1500 slots: traffic to/from the rack stalls,
+    then recovery timeouts carry every message across the window."""
+    tbl = make_messages("W2", n_hosts=16, load=0.5, n_messages=150,
+                        slot_bytes=256, seed=5)
+    fab = scenarios.tor_failure(
+        FabricConfig(racks=4, oversub=2.0), rack=1, start=200, end=1700)
+    cfg = SimConfig(n_hosts=16, protocol="homa", fabric=fab,
+                    max_slots=25_000, ring_cap=1024)
+    r = simulate(cfg, tbl, return_state=True)
+    assert r.n_complete == r.n_messages
+    assert r.fault_lost_chunks > 0
+    assert _conserved(r.state)
+
+
+# ------------------------------------------------------ routing policies ---
+
+def _failed_uplink_run(routing: str):
+    tbl = make_messages("W2", n_hosts=16, load=0.6, n_messages=200,
+                        slot_bytes=256, seed=5)
+    fab = scenarios.uplink_failure(
+        FabricConfig(racks=4, oversub=2.0, routing=routing),
+        uplink=0, start=500, end=4000)
+    cfg = SimConfig(n_hosts=16, protocol="homa", fabric=fab,
+                    max_slots=20_000, ring_cap=1024)
+    return simulate(cfg, tbl)
+
+
+def test_routing_policies_react_to_failed_uplink():
+    """The RepFlow point: static ECMP keeps hashing flows into the dead
+    spine for the whole window (they stall until it lifts); flowlet
+    escapes at the next epoch boundary; adaptive never touches the dead
+    uplink. Drop *counts* for the static policies depend on how often
+    the recovery timers retry into the black hole, so the robust
+    ordering is on the tail latency, not the drop totals."""
+    res = {r: _failed_uplink_run(r) for r in ("ecmp", "flowlet",
+                                              "adaptive")}
+    for routing, r in res.items():
+        assert r.n_complete == r.n_messages, routing
+        assert r.fabric["routing"] == routing
+    assert res["adaptive"].fault_lost_chunks == 0
+    assert res["ecmp"].fault_lost_chunks > 0
+    assert res["flowlet"].fault_lost_chunks > 0
+    # the tail orders by how fast each policy escapes the dead spine
+    p99 = {k: r.summary()["p99_small"] for k, r in res.items()}
+    assert p99["adaptive"] < p99["flowlet"] < p99["ecmp"], p99
+
+
+def test_adaptive_routing_balances_load_without_faults():
+    """Routing policies work standalone (faults=None): adaptive spreads
+    a shuffle across uplinks at least as evenly as static ECMP."""
+    tbl = scenarios.shuffle(n_hosts=16, bytes_per_pair=8000,
+                            spread_slots=1500, seed=2)
+    busy = {}
+    for routing in ("ecmp", "adaptive"):
+        fab = FabricConfig(racks=4, oversub=2.0, routing=routing)
+        cfg = SimConfig(n_hosts=16, protocol="homa", max_slots=12_000,
+                        ring_cap=1024, fabric=fab)
+        r = simulate(cfg, tbl)
+        assert r.n_complete == r.n_messages, routing
+        busy[routing] = r.tor_up_busy_frac
+    # adaptive's per-uplink utilization spread is no worse than ECMP's
+    assert busy["adaptive"].std() <= busy["ecmp"].std() + 1e-9, busy
+
+
+# --------------------------------------------------------- composition ----
+
+def test_faults_compose_with_run_sweep():
+    """Loss draws are counter-based (no PRNG state, no batch-index
+    dependence): vmapped sweeps stay bit-identical to sequential runs."""
+    fab = FabricConfig(racks=4, oversub=2.0, routing="flowlet",
+                       faults=FaultConfig(up_loss=0.02, seed=9))
+    cfg = SimConfig(n_hosts=16, protocol="homa", fabric=fab,
+                    max_slots=6000, ring_cap=512)
+    tables = [make_messages("W2", n_hosts=16, load=0.6, n_messages=120,
+                            slot_bytes=256, seed=s) for s in range(3)]
+    seq = [simulate(cfg, t, return_state=True) for t in tables]
+    swe = run_sweep(cfg, tables, return_state=True)
+    for a, b in zip(seq, swe):
+        np.testing.assert_array_equal(a.completion, b.completion)
+        np.testing.assert_array_equal(a.retx_chunks, b.retx_chunks)
+        np.testing.assert_array_equal(a.msg_lost_chunks, b.msg_lost_chunks)
+        assert a.fault_lost_chunks == b.fault_lost_chunks
+
+
+def test_fault_runs_reproducible_and_seed_sensitive():
+    tbl = make_messages("W2", n_hosts=8, load=0.5, n_messages=100,
+                        slot_bytes=256, seed=0)
+    def run(seed):
+        fab = FabricConfig(racks=2, faults=FaultConfig(up_loss=0.05,
+                                                       seed=seed))
+        cfg = SimConfig(n_hosts=8, protocol="homa", fabric=fab,
+                        max_slots=8000, ring_cap=512)
+        return simulate(cfg, tbl)
+    a, b, c = run(0), run(0), run(1)
+    np.testing.assert_array_equal(a.completion, b.completion)
+    assert a.fault_lost_chunks == b.fault_lost_chunks
+    assert (np.asarray(a.completion) != np.asarray(c.completion)).any() \
+        or a.fault_lost_chunks != c.fault_lost_chunks
+
+
+def test_faults_bit_identical_across_backends():
+    """The fault layer rides the backend contract (DESIGN.md §6): the
+    pallas leg reproduces the reference leg bit-for-bit under loss."""
+    tbl = make_messages("W2", n_hosts=8, load=0.6, n_messages=50,
+                        slot_bytes=256, seed=2)
+    fab = FabricConfig(racks=2, oversub=2.0,
+                       faults=FaultConfig(up_loss=0.05))
+    out = {}
+    for backend in ("reference", "pallas"):
+        cfg = SimConfig(n_hosts=8, protocol="homa", fabric=fab,
+                        max_slots=1500, ring_cap=256, backend=backend)
+        out[backend] = simulate(cfg, tbl)
+    np.testing.assert_array_equal(out["reference"].completion,
+                                  out["pallas"].completion)
+    np.testing.assert_array_equal(out["reference"].retx_chunks,
+                                  out["pallas"].retx_chunks)
+    assert out["reference"].fault_lost_chunks \
+        == out["pallas"].fault_lost_chunks
+
+
+# ------------------------------------------------------- stats plumbing ----
+
+def test_recovery_stats_in_summary_and_json():
+    r = _loss_run("homa")
+    s = json.loads(r.to_json())
+    fl = s["faults"]
+    assert fl["up_loss"] == 0.01
+    assert fl["fault_lost_chunks"] == r.fault_lost_chunks > 0
+    assert fl["retx_chunks"] == int(np.sum(r.retx_chunks))
+    assert fl["msgs_lossy"] == int(np.sum(r.msg_lost_chunks > 0)) > 0
+    assert fl["recovery_mean_slots"] > 0
+    assert fl["recovery_p99_slots"] >= fl["recovery_mean_slots"]
+    assert s["fabric"]["routing"] == "ecmp"
+    # recovery_slots is -1 exactly for the messages never hit by loss
+    hit = r.msg_lost_chunks > 0
+    assert (r.recovery_slots[~hit] == -1).all()
+    assert (r.recovery_slots[hit & (r.completion >= 0)] >= 0).all()
+    # fault-free runs keep the schema (faults: null)
+    clean = simulate(SimConfig(n_hosts=4, max_slots=1500, ring_cap=256),
+                     make_messages("W1", n_hosts=4, load=0.5,
+                                   n_messages=50, slot_bytes=256, seed=0))
+    assert json.loads(clean.to_json())["faults"] is None
+    assert clean.retx_chunks is None and clean.fault_lost_chunks == 0
+
+
+# ------------------------------------------------- config validation -------
+
+def test_fault_config_validation_errors():
+    fab = dict(racks=4, oversub=2.0)
+    with pytest.raises(ValueError, match="up_loss"):
+        SimConfig(n_hosts=16, fabric=FabricConfig(
+            **fab, faults=FaultConfig(up_loss=1.5)))
+    with pytest.raises(ValueError, match="ge_p_bg"):
+        SimConfig(n_hosts=16, fabric=FabricConfig(
+            **fab, faults=FaultConfig(ge_p_gb=0.1, ge_p_bg=0.0)))
+    with pytest.raises(ValueError, match="link_fail"):
+        SimConfig(n_hosts=16, fabric=FabricConfig(
+            **fab, faults=FaultConfig(link_fail=((99, 0, 100),))))
+    with pytest.raises(ValueError, match="tor_fail"):
+        SimConfig(n_hosts=16, fabric=FabricConfig(
+            **fab, faults=FaultConfig(tor_fail=((0, 100, 100),))))
+    with pytest.raises(ValueError, match="timeouts"):
+        SimConfig(n_hosts=16, fabric=FabricConfig(
+            **fab, faults=FaultConfig(resend_slots=0)))
+    with pytest.raises(ValueError, match="routing"):
+        SimConfig(n_hosts=16, fabric=FabricConfig(**fab,
+                                                  routing="spray"))
+    with pytest.raises(ValueError, match="flowlet_slots"):
+        SimConfig(n_hosts=16, fabric=FabricConfig(**fab,
+                                                  flowlet_slots=0))
+    # JSON round-trip: dict faults + list windows normalize and hash
+    fab2 = FabricConfig(racks=4, faults=dict(up_loss=0.01,
+                                             link_fail=[[0, 10, 20]]))
+    assert isinstance(fab2.faults, FaultConfig)
+    assert fab2.faults.link_fail == ((0, 10, 20),)
+    hash(fab2)
+
+
+def test_scenario_fault_helpers():
+    fab = FabricConfig(racks=4, oversub=2.0)
+    lossy = scenarios.lossy_fabric(fab, up_loss=0.02, ge_p_gb=0.01)
+    assert lossy.faults.up_loss == 0.02 and lossy.faults.ge_on
+    stacked = scenarios.tor_failure(
+        scenarios.uplink_failure(lossy, uplink=3, start=0, end=50),
+        rack=2, start=10, end=90)
+    assert stacked.faults.up_loss == 0.02          # composition preserves
+    assert stacked.faults.link_fail == ((3, 0, 50),)
+    assert stacked.faults.tor_fail == ((2, 10, 90),)
+    with pytest.raises(ValueError, match="enabled fabric"):
+        scenarios.lossy_fabric(FabricConfig(None), up_loss=0.1)
+
+
+def test_unknown_workload_raises_valueerror_listing_bins():
+    """Satellite: sample_sizes/make_messages raised a bare KeyError on
+    unknown workload names; now a ValueError listing WORKLOAD_BINS."""
+    from repro.core.workloads import sample_sizes
+    with pytest.raises(ValueError, match=r"unknown workload 'W9'.*W1"):
+        sample_sizes("W9", 10, np.random.default_rng(0))
+    with pytest.raises(ValueError, match="available workloads"):
+        make_messages("web-search", n_hosts=4, load=0.5, n_messages=10,
+                      slot_bytes=256)
+
+
+# ------------------------------------------- property: liveness (§3.7) ----
+
+@settings(max_examples=8, deadline=None)
+@given(proto=st_.sampled_from(ALL_PROTOS),
+       n_hosts=st_.sampled_from([4, 8]),
+       racks=st_.sampled_from([1, 2]),
+       n_messages=st_.integers(min_value=10, max_value=50),
+       loss=st_.sampled_from([0.0, 0.1, 0.3, 0.5, 0.7]),
+       seed=st_.integers(min_value=0, max_value=5))
+def test_retransmission_liveness(proto, n_hosts, racks, n_messages, loss,
+                                 seed):
+    """For any loss rate < 1 and any protocol, every message eventually
+    completes: the recovery timers guarantee retransmission liveness
+    over ragged host/message shapes (hypothesis satellite)."""
+    tbl = make_messages("W1", n_hosts=n_hosts, load=0.5,
+                        n_messages=n_messages, slot_bytes=256, seed=seed,
+                        max_bytes=2000)
+    fab = FabricConfig(racks=racks, oversub=2.0, faults=FaultConfig(
+        up_loss=loss, down_loss=loss / 2,
+        resend_slots=40, sender_timeout_slots=60))
+    cfg = SimConfig(n_hosts=n_hosts, protocol=proto, fabric=fab,
+                    max_slots=6000, ring_cap=512)
+    r = simulate(cfg, tbl, return_state=True)
+    assert r.n_complete == r.n_messages, \
+        (proto, n_hosts, racks, loss, seed, r.n_complete)
+    assert _conserved(r.state)
