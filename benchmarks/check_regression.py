@@ -38,6 +38,13 @@ WALL_FIELDS = {
     "fig10_incast": {},
     "fabric_smoke": {},
     "faults_smoke": {},
+    # telemetry CI cell: capture shape (event counts, overflow, samples,
+    # perfetto size) gates exactly; wall times and the derived overhead
+    # percentage only within a generous factor (machine speed / noise —
+    # overhead_pct compares small differences of small numbers)
+    "trace_smoke": {"exec_off_s": 25.0, "exec_on_s": 25.0,
+                    "overhead_pct": 1000.0, "aot_trace_s": 25.0,
+                    "aot_compile_s": 25.0, "aot_execute_s": 25.0},
     "sweep_speed": {"sequential_s": 25.0, "sweep_s": 25.0, "ratio": 25.0},
 }
 

@@ -137,12 +137,19 @@ def backend_compare(full: bool = False):
     for label, kw in cells:
         cfg = SimConfig(protocol="homa", n_hosts=16, ring_cap=1024,
                         max_slots=max_slots, **kw)
+        t0 = time.perf_counter()
         simulate(cfg, tbl)                          # compile + warm caches
+        warm = time.perf_counter() - t0
         t0 = time.perf_counter()
         r = simulate(cfg, tbl)
         dt = time.perf_counter() - t0
+        # cold-call minus steady-state wall ~ trace+compile time of the
+        # production program (the traced program's exact AOT split is
+        # reported by the trace_smoke cell; DESIGN.md §8)
         rows.append(dict(backend=label, jax_backend=jax.default_backend(),
                          slots=max_slots, wall_s=round(dt, 3),
+                         warm_s=round(warm, 3),
+                         compile_est_s=round(max(warm - dt, 0.0), 3),
                          slots_per_sec=round(max_slots / dt),
                          n_complete=r.n_complete))
     # the backends must agree on the physics, whatever their speed

@@ -1,0 +1,132 @@
+"""Telemetry benchmarks (DESIGN.md §8).
+
+Two harnesses:
+
+  ``trace_smoke``           the CI cell: one fig_faults-scale lossy
+                            leaf-spine homa run, simulated with tracing
+                            off and on. Pins the captured ledger/series
+                            shape exactly (event counts, overflow,
+                            samples, exported Perfetto event count) and
+                            reports the measured capture overhead (wall
+                            fields, ratio-gated) plus the AOT
+                            trace/compile/execute split. Also exercises
+                            the ``SimResult.to_json(full=True)`` /
+                            ``from_json`` round-trip as the bench-cache
+                            full-result store, and exports a sample
+                            Perfetto trace under ``artifacts/bench/``
+                            (uploaded as a CI artifact).
+  ``fig13_prio_usage_time`` the paper's Fig. 13 priority-usage view
+                            unrolled over time: per-window drained bytes
+                            per priority level from the strided series,
+                            for homa on W2 — shows the receiver walking
+                            its scheduled levels as load shifts.
+
+Capture-overhead target (ISSUE 7): < 20% slot-rate regression with
+tracing on at the default stride. The measured value is a wall field —
+reported and carried in the baseline, never exact-gated.
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from benchmarks.common import ART, emit
+from repro.core import SimConfig, FabricConfig, TraceConfig, simulate, \
+    make_messages
+from repro.core.results import SimResult
+
+TOPO = dict(n_hosts=16, racks=4, oversub=2.0, ring_cap=1024, up_cap=2048)
+
+
+def _smoke_cfg(trace: TraceConfig | None, max_slots: int) -> SimConfig:
+    fab = FabricConfig(racks=TOPO["racks"], oversub=TOPO["oversub"],
+                       up_cap=TOPO["up_cap"],
+                       faults=dict(up_loss=0.01))
+    return SimConfig(n_hosts=TOPO["n_hosts"], protocol="homa",
+                     ring_cap=TOPO["ring_cap"], max_slots=max_slots,
+                     fabric=fab, trace=trace)
+
+
+def trace_smoke(full: bool = False):
+    """One lossy leaf-spine homa run, traced vs untraced (the CI cell)."""
+    n_msgs, max_slots = (1200, 30_000) if full else (400, 8_000)
+    tbl = make_messages("W2", n_hosts=TOPO["n_hosts"], load=0.5,
+                        n_messages=n_msgs, slot_bytes=256, seed=7)
+
+    # untraced leg: capture disabled (bit-identical to trace=None) but
+    # wallclock on, so both legs report the exact AOT execute time of
+    # their scan — the slot-rate comparison is free of jit-dispatch and
+    # warmup noise
+    cfg_off = _smoke_cfg(TraceConfig(enabled=False, wallclock=True,
+                                     wallclock_repeats=3), max_slots)
+    r_off = simulate(cfg_off, tbl)
+    t_off = r_off.trace_summary["timings"]
+
+    # traced leg at the default stride, same protocol physics
+    cfg_on = _smoke_cfg(TraceConfig(stride=16, ledger_cap=4096,
+                                    wallclock=True, wallclock_repeats=3),
+                        max_slots)
+    r_on = simulate(cfg_on, tbl)
+    timings = r_on.trace.timings
+    overhead = (timings["execute_s"] - t_off["execute_s"]) \
+        / t_off["execute_s"] * 100 if t_off["execute_s"] > 0 else 0.0
+
+    # tracing must be pure observation (a real error, not an assert:
+    # must survive `python -O`)
+    if not np.array_equal(r_off.completion, r_on.completion):
+        raise RuntimeError("tracing changed completion slots")
+
+    # bench-cache full-result round-trip (SimResult.from_json satellite)
+    full_fp = ART / "trace_smoke_full.json"
+    full_fp.write_text(r_on.to_json(full=True))
+    r_back = SimResult.from_json(full_fp.read_text())
+    if not np.array_equal(r_back.completion, r_on.completion):
+        raise RuntimeError("SimResult JSON round-trip drifted")
+
+    # sample exporter outputs (CI uploads artifacts/bench/*)
+    tr = r_on.trace
+    doc = tr.to_perfetto(ART / "trace_sample_perfetto.json")
+    json.loads((ART / "trace_sample_perfetto.json").read_text())  # valid?
+    (ART / "trace_sample_timeseries.json").write_text(
+        json.dumps(tr.to_timeseries_json()))
+
+    rows = [dict(
+        protocol="homa", n_messages=n_msgs, slots=max_slots,
+        n_complete=r_back.n_complete,
+        n_events=tr.n_events, n_events_seen=tr.n_events_seen,
+        events_dropped=tr.events_dropped, samples=len(tr.sample_slots),
+        stride=tr.stride, perfetto_events=len(doc["traceEvents"]),
+        exec_off_s=round(t_off["execute_s"], 3),
+        exec_on_s=round(timings["execute_s"], 3),
+        overhead_pct=round(overhead, 1),
+        aot_trace_s=timings["trace_s"], aot_compile_s=timings["compile_s"],
+        aot_execute_s=timings["execute_s"])]
+    emit("trace_smoke", rows)
+    print(f"# trace_smoke capture overhead: {overhead:.1f}% "
+          f"(target < 20%)")
+    return rows
+
+
+def fig13_prio_usage_time(full: bool = False):
+    """Priority usage over time (paper Fig. 13, unrolled): per-window
+    drained bytes per priority level from the strided trace series."""
+    n_msgs, max_slots = (2000, 40_000) if full else (600, 10_000)
+    tbl = make_messages("W2", n_hosts=8, load=0.7, n_messages=n_msgs,
+                        slot_bytes=256, seed=0)
+    cfg = SimConfig(n_hosts=8, protocol="homa", ring_cap=1024,
+                    max_slots=max_slots,
+                    trace=TraceConfig(stride=max_slots // 40,
+                                      ledger_cap=0))
+    r = simulate(cfg, tbl)
+    usage = r.trace.prio_usage("down")              # (T, P) bytes
+    tot = usage.sum(axis=1, keepdims=True)
+    share = np.where(tot > 0, usage / np.maximum(tot, 1), 0.0)
+    rows = []
+    for k, t in enumerate(r.trace.sample_slots.tolist()):
+        row = dict(slot=int(t), drained_bytes=int(usage[k].sum()))
+        row.update({f"p{p}_share": round(float(share[k, p]), 3)
+                    for p in range(usage.shape[1])})
+        rows.append(row)
+    emit("fig13_prio_usage_time", rows)
+    return rows

@@ -151,6 +151,25 @@ def paper_validation():
                          f" (lost={by['homa', 'linkfail', rt, 0.0]['fault_lost']})"
                          for rt in ("ecmp", "flowlet", "adaptive")
                          if ("homa", "linkfail", rt, 0.0) in by)))
+    ts = j("trace_smoke.json")
+    if ts:
+        r = ts[0]
+        rows.append(("Telemetry: capture overhead (traced vs untraced "
+                     "scan execute)",
+                     "< 20% slot-rate regression (DESIGN §8)",
+                     f"{r['overhead_pct']}% ({r['exec_on_s']}s vs "
+                     f"{r['exec_off_s']}s over {r['slots']} slots)"))
+        rows.append(("Telemetry: event-ledger occupancy",
+                     "bounded capture; overflow counted, never grown",
+                     f"{r['n_events']}/{r['n_events_seen']} rows kept "
+                     f"(dropped {r['events_dropped']}, cap via "
+                     f"TraceConfig.ledger_cap); {r['samples']} series "
+                     f"samples @ stride {r['stride']}"))
+        rows.append(("Telemetry: AOT wall-clock split "
+                     "(trace/compile/execute)",
+                     "execute dominates at bench scale",
+                     f"{r['aot_trace_s']}s / {r['aot_compile_s']}s / "
+                     f"{r['aot_execute_s']}s"))
     sw = j("sweep_speed.json")
     if sw:
         rows.append(("run_sweep vs sequential run_sim (8 seeds)",

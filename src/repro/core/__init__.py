@@ -5,6 +5,7 @@ from repro.core.sim import (SimConfig, SimResult, simulate, run_sweep,
                             run_sim, slowdown_percentiles)
 from repro.core.fabric import FabricConfig
 from repro.core.faults import FaultConfig
+from repro.core.telemetry import TraceConfig, SimTrace
 from repro.core.protocols import (Protocol, SenderPolicy, ReceiverPolicy,
                                   register, get_protocol,
                                   registered_protocols)
@@ -13,7 +14,8 @@ from repro.core import scenarios
 from repro.core.priorities import PriorityAllocation, allocate_priorities
 
 __all__ = [
-    "SimConfig", "SimResult", "FabricConfig", "FaultConfig", "simulate",
+    "SimConfig", "SimResult", "FabricConfig", "FaultConfig", "TraceConfig",
+    "SimTrace", "simulate",
     "run_sweep",
     "run_sim", "slowdown_percentiles",
     "Protocol", "SenderPolicy", "ReceiverPolicy", "register",

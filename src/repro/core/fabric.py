@@ -311,13 +311,20 @@ def uplink_drain(cfg, st, S, now):
         dst, ins_ok, msg, prio, vseq)
 
     qlen = eligible.sum(axis=1) - any_e.astype(I32)
-    return {**st,
-            "r_msg": r_msg, "r_prio": r_prio, "r_seq": r_seq,
-            "r_valid": r_valid, "u_valid": u_valid,
-            "lost": st["lost"] + d_drop,
-            "u_busy": st["u_busy"] + any_e.astype(I32),
-            "u_q_sum": st["u_q_sum"] + qlen.astype(jnp.float32),
-            "u_q_max": jnp.maximum(st["u_q_max"], qlen)}
+    out = {**st,
+           "r_msg": r_msg, "r_prio": r_prio, "r_seq": r_seq,
+           "r_valid": r_valid, "u_valid": u_valid,
+           "lost": st["lost"] + d_drop,
+           "u_busy": st["u_busy"] + any_e.astype(I32),
+           "u_q_sum": st["u_q_sum"] + qlen.astype(jnp.float32),
+           "u_q_max": jnp.maximum(st["u_q_max"], qlen)}
+    if getattr(cfg, "trace_on", False):
+        # telemetry tap (DESIGN.md §8): running uplink-tier per-priority
+        # drain counter, sampled into the strided series by capture_slot
+        dp = jnp.where(any_e, jnp.minimum(prio, cfg.n_prios - 1), 0)
+        out["tr_uprio_c"] = st["tr_uprio_c"].at[dp].add(
+            jnp.where(any_e, 1, 0), mode="drop")
+    return out
 
 
 __all__ = ["FabricConfig", "FaultConfig", "ROUTING_POLICIES", "spine_hash",

@@ -347,11 +347,18 @@ def apply_recovery(cfg, proto, st, S, now, drained_msg, any_elig):
     resend = proto.receiver.resend(cfg, st, S, now, known, quiet)
     rw = missing & (resend | (quiet >= fl.sender_timeout_slots))
     rewound = jnp.where(rw, st["sent"] - st["recv"], 0)
-    return {**st,
-            "last_arr": last_arr,
-            "sent": jnp.where(rw, st["recv"], st["sent"]),
-            "retx": st["retx"] + rewound,
-            "last_rw": jnp.where(rw, now, st["last_rw"])}
+    out = {**st,
+           "last_arr": last_arr,
+           "sent": jnp.where(rw, st["recv"], st["sent"]),
+           "retx": st["retx"] + rewound,
+           "last_rw": jnp.where(rw, now, st["last_rw"])}
+    if getattr(cfg, "ledger_on", False):
+        # telemetry tap (DESIGN.md §8): per-slot rewind amounts split by
+        # trigger, consumed by the event ledger at end of slot. RESEND
+        # wins attribution when both timers fired the same slot.
+        out["tr_resend"] = jnp.where(rw & resend, rewound, 0)
+        out["tr_timeout"] = jnp.where(rw & ~resend, rewound, 0)
+    return out
 
 
 __all__ = ["FaultConfig", "link_down_mask", "host_down_mask",

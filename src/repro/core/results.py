@@ -10,9 +10,30 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import math
 from typing import Any
 
 import numpy as np
+
+
+def _json_safe(v):
+    """Recursively convert numpy scalars/arrays, tuples, and non-finite
+    floats (NaN -> null) into strict-JSON-serializable values."""
+    if isinstance(v, np.ndarray):
+        return _json_safe(v.tolist())
+    if isinstance(v, np.integer):
+        return int(v)
+    if isinstance(v, np.floating):
+        v = float(v)
+    if isinstance(v, float):
+        return v if math.isfinite(v) else None
+    if isinstance(v, np.bool_):
+        return bool(v)
+    if isinstance(v, dict):
+        return {k: _json_safe(x) for k, x in v.items()}
+    if isinstance(v, (list, tuple)):
+        return [_json_safe(x) for x in v]
+    return v
 
 
 def bucketed_percentiles(size_bytes: np.ndarray, slowdown: np.ndarray,
@@ -23,7 +44,9 @@ def bucketed_percentiles(size_bytes: np.ndarray, slowdown: np.ndarray,
     sizes = size_bytes[ok]
     sl = slowdown[ok]
     if len(sizes) == 0:
-        return {"sizes": [], "p": [], "median": []}
+        # same schema as the populated case (count included) whether the
+        # input was empty or merely had no finished messages
+        return {"sizes": [], "p": [], "median": [], "count": []}
     order = np.argsort(sizes)
     sizes, sl = sizes[order], sl[order]
     edges = np.linspace(0, len(sizes), n_buckets + 1).astype(int)
@@ -80,6 +103,11 @@ class SimResult:
     msg_lost_chunks: np.ndarray | None = None  # (M,) fault-dropped chunks
     recovery_slots: np.ndarray | None = None   # (M,) first loss -> done; -1
     fault_lost_chunks: int = 0       # total chunks dropped by fault injection
+    # telemetry capture (None when SimConfig.trace was off, DESIGN.md §8):
+    # trace is the full SimTrace (simulate only — run_sweep keeps just
+    # trace_summary, the reduced streaming-stat dict)
+    trace: Any | None = None         # repro.core.telemetry.SimTrace
+    trace_summary: dict | None = None
     # optional raw scan state (return_state=True)
     state: dict | None = None
     static: dict | None = None
@@ -165,10 +193,68 @@ class SimResult:
             "p50_all": self.percentile(50, ok),
             "fabric": fabric,
             "faults": faults,
+            "trace": self.trace_summary,
         }
 
-    def to_json(self, **kwargs) -> str:
-        return json.dumps(self.summary(**kwargs))
+    # every per-message / per-host array field, with the dtype family
+    # from_json restores it as (dtype identity is not part of the
+    # round-trip contract; values — including NaN — are)
+    _ARRAY_FIELDS = {
+        "completion": np.int64, "elapsed": np.int64, "ideal": np.int64,
+        "slowdown": np.float64, "done": np.bool_,
+        "size_slots": np.int64, "size_bytes": np.int64,
+        "busy_frac": np.float64, "wasted_frac": np.float64,
+        "uplink_busy_frac": np.float64,
+        "q_mean_bytes": np.float64, "q_max_bytes": np.int64,
+        "prio_drained_bytes": np.int64,
+        "tor_up_busy_frac": np.float64, "tor_up_q_mean_bytes": np.float64,
+        "tor_up_q_max_bytes": np.int64,
+        "retx_chunks": np.int64, "msg_lost_chunks": np.int64,
+        "recovery_slots": np.int64,
+    }
+    _SKIP_FIELDS = ("state", "static", "trace")   # not JSON-serialized
+
+    def to_json(self, *, full: bool = False, **kwargs) -> str:
+        """JSON string of the aggregate :meth:`summary` (default), or —
+        with ``full=True`` — of every array field, round-trippable
+        through :meth:`from_json` (the bench-cache full-result form).
+        Both are strict JSON (numpy scalars unwrapped, NaN -> null)."""
+        if not full:
+            return json.dumps(_json_safe(self.summary(**kwargs)))
+        d = {"__simresult__": 1}
+        for f in dataclasses.fields(self):
+            if f.name in self._SKIP_FIELDS:
+                continue
+            v = getattr(self, f.name)
+            if f.name == "alloc" and v is not None:
+                v = {"n_prios": v.n_prios, "n_unsched": v.n_unsched,
+                     "cutoffs": list(v.cutoffs),
+                     "unsched_bytes_frac": v.unsched_bytes_frac}
+            d[f.name] = _json_safe(v)
+        return json.dumps(d)
+
+    @classmethod
+    def from_json(cls, s: str | dict) -> "SimResult":
+        """Rebuild a :class:`SimResult` from :meth:`to_json(full=True)
+        <to_json>` output (str or already-parsed dict). Array fields come
+        back as numpy (nulls in float arrays -> NaN); ``state`` /
+        ``static`` / the full ``trace`` are not round-tripped."""
+        d = dict(json.loads(s)) if isinstance(s, str) else dict(s)
+        if not d.pop("__simresult__", None):
+            raise ValueError("not a full SimResult serialization; use "
+                             "to_json(full=True) to produce one")
+        if isinstance(d.get("alloc"), dict):
+            from repro.core.priorities import PriorityAllocation
+            a = d["alloc"]
+            d["alloc"] = PriorityAllocation(
+                n_prios=a["n_prios"], n_unsched=a["n_unsched"],
+                cutoffs=tuple(a["cutoffs"]),
+                unsched_bytes_frac=a["unsched_bytes_frac"])
+        for name, dt in cls._ARRAY_FIELDS.items():
+            if d.get(name) is not None:
+                d[name] = np.asarray(d[name], dtype=dt)
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
 
     def to_legacy_dict(self) -> dict:
         """The exact dict schema returned by the original ``run_sim``."""

@@ -62,6 +62,8 @@ from repro.core.fabric import (FabricConfig, spine_hash, ring_insert,
                                route_chunks, uplink_drain)
 from repro.core.faults import (FaultConfig, init_fault_state,
                                apply_recovery, host_down_mask)
+from repro.core import telemetry
+from repro.core.telemetry import TraceConfig, SimTrace
 from repro.core.results import SimResult, bucketed_percentiles
 from repro.kernels.arbiter.dispatch import resolve_backend, \
     resolve_interpret
@@ -81,6 +83,10 @@ class SimConfig:
     phost_timeout_slots: int = 114      # ~3 RTT
     max_slots: int = 20_000
     fabric: FabricConfig | None = None  # None: single switch (DESIGN.md §5)
+    # in-scan telemetry capture (repro.core.telemetry, DESIGN.md §8);
+    # None (the default) keeps the scan free of every trace array and op
+    # — bit-identical to the pre-telemetry simulator
+    trace: TraceConfig | None = None
     # compute backend for the per-slot arbitration hot path (DESIGN.md §6):
     # "reference" (pure-jnp) | "pallas" (kernels.arbiter); None resolves
     # from $SIM_BACKEND. Both backends are bit-identical by contract.
@@ -97,6 +103,11 @@ class SimConfig:
                            resolve_interpret(self.pallas_interpret))
         if self.fabric is not None:
             self.fabric.validate(self.n_hosts)
+        # JSON round-trip convenience: accept a plain dict for trace
+        if isinstance(self.trace, dict):
+            object.__setattr__(self, "trace", TraceConfig(**self.trace))
+        if self.trace is not None:
+            self.trace.validate()
 
     @property
     def rtt_bytes(self) -> int:
@@ -115,6 +126,19 @@ class SimConfig:
         default) keeps the scan loss-free and bit-identical to the
         pre-fault simulator."""
         return self.fabric_on and self.fabric.faults is not None
+
+    @property
+    def trace_on(self) -> bool:
+        """True iff in-scan telemetry capture is active (DESIGN.md §8).
+        ``trace=None`` and ``TraceConfig(enabled=False)`` both keep the
+        scan bit-identical to the untraced simulator."""
+        return self.trace is not None and self.trace.enabled
+
+    @property
+    def ledger_on(self) -> bool:
+        """True iff the protocol event ledger is captured (``trace_on``
+        with a nonzero ``ledger_cap``)."""
+        return self.trace_on and self.trace.ledger_cap > 0
 
 
 def _to_slots(nbytes: np.ndarray, slot_bytes: int) -> np.ndarray:
@@ -181,6 +205,7 @@ def _init_state(cfg: SimConfig, proto: Protocol, M: int):
         **proto.extra_state(cfg, M),          # protocol-private carry
         **(init_fabric_state(cfg) if cfg.fabric_on else {}),
         **(init_fault_state(cfg, M) if cfg.faults_on else {}),
+        **(telemetry.init_trace_state(cfg, M) if cfg.trace_on else {}),
         "sent": z((M,)),
         "granted_s": z((M,)),                 # sender-visible grant (slots)
         "grant_r": z((M,)),                   # receiver-issued grant (slots)
@@ -225,6 +250,9 @@ def step_fn(cfg: SimConfig, proto: Protocol, S, n_sched: int, st, now):
     uplinks, the network, and the priority-queue downlinks."""
     H, cap, Dg = cfg.n_hosts, cfg.ring_cap, cfg.grant_delay_slots
     M = S["size"].shape[0]
+
+    # pre-step references for telemetry event deltas (DESIGN.md §8)
+    tr_prev = telemetry.snapshot(cfg, st) if cfg.trace_on else None
 
     # ---- 1. receiver policy (current state), store into delay history
     grant_r, sched_prio, active, withheld = proto.receiver.grants(
@@ -320,6 +348,10 @@ def step_fn(cfg: SimConfig, proto: Protocol, S, n_sched: int, st, now):
     # ---- 6. protocol end-of-slot hook (e.g. pHost sender timeouts)
     st = proto.post_step(cfg, st, S, now, active, drained_msg, any_elig)
 
+    # ---- 7. telemetry capture (ledger append + strided series rows)
+    if cfg.trace_on:
+        st = telemetry.capture_slot(cfg, st, S, now, tr_prev, active, qlen)
+
     return st, None
 
 
@@ -345,8 +377,13 @@ def _run_batch(cfg: SimConfig, proto: Protocol, S_stack, n_sched: int):
 
 
 def _finalize(cfg: SimConfig, table: MessageTable, S, alloc, st,
-              return_state: bool) -> SimResult:
-    """Numpy post-processing of one run's final scan state."""
+              return_state: bool, reduce_trace: bool = False,
+              timings: dict | None = None) -> SimResult:
+    """Numpy post-processing of one run's final scan state.
+
+    ``reduce_trace=True`` (the ``run_sweep`` path) keeps only the
+    streaming-stat scalars of a captured trace — vmapped sweeps never
+    hold N full ``SimTrace`` histories at once (DESIGN.md §8)."""
     size_slots = np.asarray(S["size"])
     arrival = np.asarray(S["arrival"])
     done = st["completion"] >= 0
@@ -393,6 +430,16 @@ def _finalize(cfg: SimConfig, table: MessageTable, S, alloc, st,
                                     - first_loss, -1),
             fault_lost_chunks=int(st["f_lost"]))
 
+    trace = trace_summary = None
+    if cfg.trace_on:
+        tr = telemetry.finalize_trace(cfg, st, timings)
+        trace_summary = tr.reduce()
+        if not reduce_trace:
+            trace = tr
+    elif timings is not None:
+        # wallclock-only run (capture disabled): keep the stage split
+        trace_summary = {"timings": timings}
+
     return SimResult(
         protocol=cfg.protocol, alloc=alloc,
         completion=st["completion"], elapsed=elapsed, ideal=ideal,
@@ -407,6 +454,7 @@ def _finalize(cfg: SimConfig, table: MessageTable, S, alloc, st,
         lost_chunks=int(st["lost"]) + int(st.get("u_lost", 0)),
         n_complete=int(done.sum()), n_messages=len(size_slots),
         fabric=fabric, **tor_kw,
+        trace=trace, trace_summary=trace_summary,
         state=st if return_state else None,
         static=jax.tree.map(np.asarray, S) if return_state else None,
     )
@@ -416,14 +464,28 @@ def simulate(cfg: SimConfig, table: MessageTable,
              alloc: PriorityAllocation | None = None,
              unsched_limit_bytes=None,
              return_state: bool = False) -> SimResult:
-    """Run one simulation; returns a structured :class:`SimResult`."""
+    """Run one simulation; returns a structured :class:`SimResult`.
+
+    With ``cfg.trace = TraceConfig(wallclock=True)`` the scan runs
+    through jax's AOT path and the exact trace / compile / execute
+    wall-clock split lands in ``result.trace.timings``."""
     proto = get_protocol(cfg.protocol)
     S, alloc = prepare(cfg, table, alloc, unsched_limit_bytes)
     n_sched = proto.n_sched(cfg, alloc)
     st0 = _init_state(cfg, proto, len(table.size))
-    st = _run(cfg, proto, S, st0, n_sched)
+    timings = None
+    if cfg.trace is not None and cfg.trace.wallclock:
+        # wallclock instrumentation works with capture disabled too
+        # (TraceConfig(enabled=False, wallclock=True)): the timings of
+        # the UNTRACED program, for capture-overhead measurement
+        st, timings = telemetry.timed_aot_run(
+            _run, (cfg, proto, S, st0, n_sched), (S, st0),
+            repeats=cfg.trace.wallclock_repeats)
+    else:
+        st = _run(cfg, proto, S, st0, n_sched)
     st = jax.tree.map(np.asarray, st)
-    return _finalize(cfg, table, S, alloc, st, return_state)
+    return _finalize(cfg, table, S, alloc, st, return_state,
+                     timings=timings)
 
 
 def run_sweep(cfg: SimConfig, tables: list[MessageTable] | None = None, *,
@@ -498,7 +560,8 @@ def run_sweep(cfg: SimConfig, tables: list[MessageTable] | None = None, *,
         for k, i in enumerate(idxs):
             st_i = jax.tree.map(lambda x: x[k], st_batch)
             results[i] = _finalize(cfg, tables[i], prepped[i][0],
-                                   prepped[i][1], st_i, return_state)
+                                   prepped[i][1], st_i, return_state,
+                                   reduce_trace=True)
     return results
 
 
@@ -520,6 +583,7 @@ def slowdown_percentiles(stats: dict | SimResult, pct: float = 99.0,
                                 stats["done"], pct, n_buckets)
 
 
-__all__ = ["SimConfig", "FabricConfig", "simulate", "run_sweep", "run_sim",
+__all__ = ["SimConfig", "FabricConfig", "TraceConfig", "SimTrace",
+           "simulate", "run_sweep", "run_sim",
            "slowdown_percentiles", "prepare", "step_fn", "SimResult",
            "registered_protocols"]
