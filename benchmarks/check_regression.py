@@ -45,7 +45,15 @@ WALL_FIELDS = {
     "trace_smoke": {"exec_off_s": 25.0, "exec_on_s": 25.0,
                     "overhead_pct": 1000.0, "aot_trace_s": 25.0,
                     "aot_compile_s": 25.0, "aot_execute_s": 25.0},
-    "sweep_speed": {"sequential_s": 25.0, "sweep_s": 25.0, "ratio": 25.0},
+    # sweep_speed: wall times and the runs/sec/device throughput figure
+    # gate within a factor; n_devices gates as a ratio too (the CI
+    # multi-device leg runs the same cell on 8 virtual devices against a
+    # 1-device baseline). The streaming per-protocol p99s and completion
+    # counts are integer-histogram-deterministic across device counts
+    # and chunk sizes, so they gate exactly.
+    "sweep_speed": {"sequential_s": 25.0, "sweep_s": 25.0, "ratio": 25.0,
+                    "mega_s": 25.0, "runs_per_sec_per_device": 25.0,
+                    "n_devices": 32.0},
 }
 
 

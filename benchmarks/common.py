@@ -24,6 +24,7 @@ from pathlib import Path
 import numpy as np
 
 from repro.core.sim import SimConfig, simulate, run_sweep
+from repro.core.sweep import SweepSpec
 from repro.core.fabric import FabricConfig
 from repro.core.workloads import make_messages
 from repro.core import scenarios
@@ -150,10 +151,10 @@ def sim_sweep(points: list[dict], *, protocol: str, overcommit=None,
     optional ``seed`` / ``alloc`` / ``unsched_limit_bytes``. All points
     share the protocol/topology config — including the optional
     leaf-spine ``fabric`` spec (a FabricConfig kwargs dict); uncached
-    points run through :func:`repro.core.run_sweep`, one jit trace per
-    table-length group (scenario sweeps legitimately vary the message
-    count, which ``run_sweep`` requires constant per batch). Returns one
-    summary per point, in order.
+    points run through ``run_sweep(cfg, SweepSpec(...))``, which groups
+    runs by their static scan parameters internally (one jit trace per
+    group — scenario sweeps legitimately vary the message count).
+    Returns one summary per point, in order.
 
     Cache keys use the *configured* ``max_slots`` cap (exactly like
     ``sim_run``), never the realized group horizon, so a point's cache
@@ -184,20 +185,18 @@ def sim_sweep(points: list[dict], *, protocol: str, overcommit=None,
                         protocol=protocol, overcommit=overcommit,
                         ring_cap=p["ring_cap"], fabric=_fabric_cfg(fabric),
                         max_slots=ms)
-        by_len: dict[int, list[int]] = {}
-        for i in todo:
-            by_len.setdefault(len(tables[i].size), []).append(i)
-        for idxs in by_len.values():
-            results = run_sweep(
-                cfg, [tables[i] for i in idxs],
-                alloc=[_alloc_from_dict(points[i].get("alloc"))
-                       for i in idxs],
-                unsched_limit_bytes=[points[i].get("unsched_limit_bytes")
-                                     for i in idxs])
-            for i, res in zip(idxs, results):
-                keyd, fp = keys[i]
-                out[i] = {**_summarize(res, keyd), "max_slots_used": ms}
-                fp.write_text(json.dumps(out[i]))
+        # mixed table lengths are fine: run_sweep groups runs by their
+        # static scan parameters internally (core/sweep.group_runs — the
+        # same grouping this function used to reimplement)
+        spec = SweepSpec(
+            tables=[tables[i] for i in todo],
+            alloc=[_alloc_from_dict(points[i].get("alloc")) for i in todo],
+            unsched_limit_bytes=[points[i].get("unsched_limit_bytes")
+                                 for i in todo])
+        for i, res in zip(todo, run_sweep(cfg, spec)):
+            keyd, fp = keys[i]
+            out[i] = {**_summarize(res, keyd), "max_slots_used": ms}
+            fp.write_text(json.dumps(out[i]))
     return out
 
 

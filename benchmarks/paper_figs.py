@@ -200,7 +200,7 @@ def fig10_incast(full: bool = False):
     """Incast: N concurrent ~RTTbytes responses to one receiver, with and
     without the incast-control unscheduled limit. Both variants of each N
     share one ``run_sweep`` trace (per-table unsched limits)."""
-    from repro.core.sim import SimConfig, run_sweep
+    from repro.core.sim import SimConfig, SweepSpec, run_sweep
     from repro.core.workloads import MessageTable
     rows = []
     for n in ([50, 150, 400, 1000] if full else [50, 300]):
@@ -212,7 +212,8 @@ def fig10_incast(full: bool = False):
         cfg = SimConfig(n_hosts=nh, protocol="homa",
                         max_slots=min(n * 60 + 4000, 120_000),
                         ring_cap=1024)
-        res = run_sweep(cfg, [tbl, tbl], unsched_limit_bytes=[None, 512])
+        res = run_sweep(cfg, SweepSpec(tables=[tbl, tbl],
+                                       unsched_limit_bytes=[None, 512]))
         for control, stats in zip((False, True), res):
             done = stats.done
             tput = (stats.size_bytes[done].sum() * 8 /

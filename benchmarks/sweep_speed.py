@@ -1,13 +1,23 @@
-"""run_sweep vs sequential run_sim: the batched-runner acceptance check.
+"""Sweep-runner speed cells: batched-vs-sequential plus the sharded
+mega-grid (DESIGN.md §9).
 
-Replays the legacy benchmark pattern — one Python-loop ``run_sim`` call
-per (protocol, workload, load, seed) point, each with its own per-point
-``max_slots`` and therefore its own jit trace — against ``run_sweep``,
-which stacks the same 8 seeds behind ONE jit trace (shared horizon,
-shared workload-level priority allocation).
+Two cells, both emitted into ``sweep_speed.json``:
 
-Emits ``sweep_speed.json`` with both wall times; the acceptance criterion
-is ratio < 0.5 on an 8-seed homa sweep.
+**batch** — the original acceptance check: one Python-loop ``simulate``
+call per seed (per-point config, per-point jit trace) vs one
+``run_sweep(cfg, SweepSpec(...))`` batching the same 8 seeds behind a
+single trace. Criterion: ratio < 0.5 on the 8-seed homa sweep.
+
+**mega** — the paper-scale grid shape (ISSUE 8 acceptance): 6 protocols
+x 3 loads x 4 seeds = 72 runs, sharded over every visible device
+(``shard=True``) with chunked scans and streaming accumulators, so only
+O(buckets) per run returns to the host. Reports ``n_devices``,
+``mega_s`` and the throughput figure ``runs_per_sec_per_device`` that
+``check_regression.py`` gates; the per-protocol streaming p99s are
+bit-deterministic (integer histograms, identical across device counts)
+and gate exactly. Run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to exercise the
+multi-device path on CPU (the CI multi-device leg does).
 """
 from __future__ import annotations
 
@@ -16,12 +26,15 @@ import time
 from benchmarks.common import emit
 
 N_SEEDS = 8
+MEGA_PROTOS = ("homa", "basic", "phost", "pias", "pfabric", "ndp")
+MEGA_LOADS = (0.5, 0.7, 0.9)
+MEGA_SEEDS = (0, 1, 2, 3)
 
 
-def sweep_speed(full: bool = False, *, workload: str = "W1",
-                load: float = 0.8, n_messages: int | None = None,
-                protocol: str = "homa"):
-    from repro.core.sim import SimConfig, run_sim, run_sweep
+def _batch_cell(full: bool, workload: str, load: float,
+                n_messages: int | None, protocol: str) -> dict:
+    from repro.core.sim import SimConfig, simulate, run_sweep
+    from repro.core.sweep import SweepSpec
     from repro.core.workloads import make_messages
 
     n_messages = n_messages or (1000 if full else 300)
@@ -37,21 +50,71 @@ def sweep_speed(full: bool = False, *, workload: str = "W1",
     for t in tables:
         cfg = SimConfig(n_hosts=8, protocol=protocol, ring_cap=256,
                         max_slots=int(t.arrival_slot.max()) + margin)
-        seq.append(run_sim(cfg, t))
+        seq.append(simulate(cfg, t))
     seq_s = time.perf_counter() - t0
 
     horizon = max(int(t.arrival_slot.max()) for t in tables) + margin
     cfg = SimConfig(n_hosts=8, protocol=protocol, ring_cap=256,
                     max_slots=horizon)
     t0 = time.perf_counter()
-    res = run_sweep(cfg, tables, shared_alloc=True)
+    res = run_sweep(cfg, SweepSpec(tables=tables, shared_alloc=True))
     sweep_s = time.perf_counter() - t0
 
-    rows = [dict(protocol=protocol, workload=workload, load=load,
-                 n_seeds=N_SEEDS, n_messages=n_messages,
-                 sequential_s=round(seq_s, 3), sweep_s=round(sweep_s, 3),
-                 ratio=round(sweep_s / seq_s, 3),
-                 seq_complete=sum(r["n_complete"] for r in seq),
-                 sweep_complete=sum(r.n_complete for r in res))]
+    return dict(kind="batch", protocol=protocol, workload=workload,
+                load=load, n_seeds=N_SEEDS, n_messages=n_messages,
+                sequential_s=round(seq_s, 3), sweep_s=round(sweep_s, 3),
+                ratio=round(sweep_s / seq_s, 3),
+                seq_complete=sum(r.n_complete for r in seq),
+                sweep_complete=sum(r.n_complete for r in res))
+
+
+def _mega_cell(full: bool, workload: str) -> dict:
+    import jax
+    from repro.core.sim import SimConfig, run_sweep
+    from repro.core.sweep import SweepSpec
+    from repro.core.workloads import make_messages
+
+    n_messages = 400 if full else 150
+    n_dev = len(jax.devices())
+    tables = [make_messages(workload, n_hosts=8, load=ld,
+                            n_messages=n_messages, slot_bytes=256, seed=s)
+              for ld in MEGA_LOADS for s in MEGA_SEEDS]
+    horizon = max(int(t.arrival_slot.max()) for t in tables) \
+        + (2000 if full else 600)
+    spec = SweepSpec(tables=tables, shared_alloc=True, shard=True,
+                     chunk_slots=512, streaming=True)
+
+    row = dict(kind="mega", workload=workload, n_messages=n_messages,
+               n_protocols=len(MEGA_PROTOS), n_loads=len(MEGA_LOADS),
+               n_seeds=len(MEGA_SEEDS))
+    t0 = time.perf_counter()
+    completions = 0
+    for proto in MEGA_PROTOS:
+        cfg = SimConfig(n_hosts=8, protocol=proto, ring_cap=256,
+                        max_slots=horizon)
+        stats = run_sweep(cfg, spec)
+        completions += sum(s.n_complete for s in stats)
+        # pooled streaming p99 across the protocol's 12 runs: integer
+        # histograms sum exactly, so this gates bit-exactly across
+        # device counts in check_regression.py
+        pooled = sum(s.hist.sum(axis=0) for s in stats)
+        from repro.core.sweep import percentile_from_hist
+        row[f"p99_{proto}"] = round(
+            percentile_from_hist(pooled, stats[0].stream, 99.0), 4)
+    mega_s = time.perf_counter() - t0
+
+    n_runs = len(MEGA_PROTOS) * len(tables)
+    row.update(n_runs=n_runs, n_devices=n_dev, mega_s=round(mega_s, 3),
+               runs_per_sec_per_device=round(mega_s and
+                                             n_runs / mega_s / n_dev, 3),
+               completions=completions)
+    return row
+
+
+def sweep_speed(full: bool = False, *, workload: str = "W1",
+                load: float = 0.8, n_messages: int | None = None,
+                protocol: str = "homa"):
+    rows = [_batch_cell(full, workload, load, n_messages, protocol),
+            _mega_cell(full, workload)]
     emit("sweep_speed", rows)
     return rows

@@ -20,7 +20,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 def sim_quickstart():
     """30-second tour of the transport-policy API: one structured run,
     then a 4-seed sweep batched behind a single jit trace."""
-    from repro.core import (SimConfig, simulate, run_sweep,
+    from repro.core import (SimConfig, SweepSpec, simulate, run_sweep,
                             registered_protocols, make_messages)
 
     print(f"registered protocols: {', '.join(registered_protocols())}")
@@ -32,8 +32,9 @@ def sim_quickstart():
           f"p99 slowdown {res.percentile(99):.2f}, "
           f"downlink busy {float(res.busy_frac.mean()):.2%}")
 
-    sweep = run_sweep(cfg, seeds=[0, 1, 2, 3], workload="W1", load=0.7,
-                      n_messages=200, shared_alloc=True)
+    sweep = run_sweep(cfg, SweepSpec(seeds=(0, 1, 2, 3), workload="W1",
+                                     load=0.7, n_messages=200,
+                                     shared_alloc=True))
     p99s = [r.percentile(99) for r in sweep]
     print(f"4-seed sweep (one jit trace): p99 = "
           f"{', '.join(f'{p:.2f}' for p in p99s)}")

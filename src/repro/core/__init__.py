@@ -3,6 +3,7 @@
 # host framework. Add sibling subpackages for substrates.
 from repro.core.sim import (SimConfig, SimResult, simulate, run_sweep,
                             run_sim, slowdown_percentiles)
+from repro.core.sweep import SweepSpec, StreamSpec, SweepStats
 from repro.core.fabric import FabricConfig
 from repro.core.faults import FaultConfig
 from repro.core.telemetry import TraceConfig, SimTrace
@@ -16,7 +17,7 @@ from repro.core.priorities import PriorityAllocation, allocate_priorities
 __all__ = [
     "SimConfig", "SimResult", "FabricConfig", "FaultConfig", "TraceConfig",
     "SimTrace", "simulate",
-    "run_sweep",
+    "run_sweep", "SweepSpec", "StreamSpec", "SweepStats",
     "run_sim", "slowdown_percentiles",
     "Protocol", "SenderPolicy", "ReceiverPolicy", "register",
     "get_protocol", "registered_protocols",

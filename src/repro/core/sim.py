@@ -37,21 +37,25 @@ Pallas kernels — bit-identical by contract, golden-tested.
 Entry points:
 
   ``simulate(cfg, table)``    one run -> :class:`SimResult`
-  ``run_sweep(cfg, tables)``  N independent runs vmapped inside ONE jit
-                              trace (multi-seed / multi-load sweeps)
-  ``run_sim(cfg, table)``     legacy dict-returning compatibility shim
+  ``run_sweep(cfg, spec)``    N independent runs described by one
+                              :class:`repro.core.sweep.SweepSpec`: vmapped
+                              per static-parameter group, optionally
+                              device-sharded (``shard_map``) with chunked
+                              scans + streaming stats (DESIGN.md §9)
+  ``run_sim(cfg, table)``     deprecated dict-returning shim
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from repro.core.workloads import MessageTable, make_messages
+from repro.core.workloads import MessageTable
 from repro.core.priorities import PriorityAllocation, allocate_priorities, \
     pias_thresholds
 from repro.core.protocols import (Protocol, get_protocol,
@@ -177,6 +181,17 @@ def prepare(cfg: SimConfig, table: MessageTable,
                                cfg.slot_bytes) if pias_cut else \
         np.array([1 << 20], np.int32)
 
+    # unloaded baseline (slots): cross-rack chunks traverse leaf + spine,
+    # so a fabric with non-default delays keeps slowdown anchored at 1.0.
+    # Static so streaming sweeps can bin slowdowns inside the scan
+    # (repro.core.sweep, DESIGN.md §9); _finalize reads it back.
+    net_delay = np.full(M, cfg.net_delay_slots, np.int64)
+    if cfg.fabric_on:
+        rs = cfg.fabric.rack_size(cfg.n_hosts)
+        cross = (table.src // rs) != (table.dst // rs)
+        net_delay = np.where(cross, cfg.fabric.leaf_delay_slots
+                             + cfg.fabric.spine_delay_slots, net_delay)
+
     static = {
         "src": jnp.asarray(table.src, I32),
         "dst": jnp.asarray(table.dst, I32),
@@ -188,6 +203,7 @@ def prepare(cfg: SimConfig, table: MessageTable,
         "dst_onehot": jnp.asarray(
             np.arange(cfg.n_hosts)[:, None] == table.dst[None, :]),
         "msg_ids": jnp.arange(M, dtype=I32),
+        "ideal": jnp.asarray(size_slots + net_delay, I32),
     }
     if cfg.fabric_on:
         # per-message ECMP spine choice (seeded, deterministic) — only
@@ -388,16 +404,7 @@ def _finalize(cfg: SimConfig, table: MessageTable, S, alloc, st,
     arrival = np.asarray(S["arrival"])
     done = st["completion"] >= 0
     elapsed = np.where(done, st["completion"] - arrival + 1, -1)
-    # unloaded baseline: cross-rack chunks traverse leaf + spine, so a
-    # fabric with non-default delays keeps slowdown anchored at 1.0
-    net_delay = cfg.net_delay_slots
-    if cfg.fabric_on:
-        rs = cfg.fabric.rack_size(cfg.n_hosts)
-        cross = (np.asarray(table.src) // rs) != (np.asarray(table.dst)
-                                                  // rs)
-        net_delay = np.where(cross, cfg.fabric.leaf_delay_slots
-                             + cfg.fabric.spine_delay_slots, net_delay)
-    ideal = size_slots + net_delay
+    ideal = np.asarray(S["ideal"]).astype(np.int64)   # set by prepare()
     slowdown = np.where(done, elapsed / ideal, np.nan)
 
     fabric = None
@@ -488,87 +495,64 @@ def simulate(cfg: SimConfig, table: MessageTable,
                      timings=timings)
 
 
-def run_sweep(cfg: SimConfig, tables: list[MessageTable] | None = None, *,
+def run_sweep(cfg: SimConfig, spec=None, *,
               seeds: list[int] | None = None, workload: str | None = None,
               load: float | None = None, n_messages: int = 2000,
               alloc=None, unsched_limit_bytes=None,
               shared_alloc: bool = False,
-              return_state: bool = False) -> list[SimResult]:
-    """Run N independent simulations batched inside ONE jit trace.
+              return_state: bool = False) -> list:
+    """Run N independent simulations batched inside one jit trace per
+    static-parameter group, optionally sharded across devices with
+    chunked scans and streaming statistics.
 
-    Either pass ``tables`` (message tables of identical length) or
-    ``seeds`` + ``workload`` + ``load`` to synthesize one table per seed.
-    ``alloc`` and ``unsched_limit_bytes`` may be lists (one entry per
-    table) to sweep priority-allocation ablations (Figs. 17/18/20) over a
-    fixed table. Per-table priority allocations default to exactly what
-    ``simulate`` computes; tables whose allocation yields a different
-    number of scheduled levels (a static scan parameter) are grouped and
-    each group is vmapped in a single compilation. Results are
-    bit-identical to sequential ``simulate`` calls and returned in input
-    order.
+    The sweep is described by a single :class:`repro.core.sweep.SweepSpec`
+    (DESIGN.md §9)::
 
-    ``shared_alloc=True`` derives ONE priority allocation from the union
-    of all tables' message sizes (the paper's workload-knowledge model,
-    §4) so every run shares the scan's static parameters and the whole
-    sweep compiles exactly once.
+        run_sweep(cfg, SweepSpec(seeds=(0, 1, 2, 3), workload="W1",
+                                 load=0.8, shared_alloc=True,
+                                 shard=True, chunk_slots=512,
+                                 streaming=True))
+
+    Returns one result per run, in input order: :class:`SimResult` for
+    exact sweeps, :class:`repro.core.sweep.SweepStats` (bounded-memory
+    streaming accumulators) when ``spec.streaming`` is set. Runs are
+    grouped by ``(table length, scheduled levels)`` — the scan's static
+    parameters — and each group compiles once; ``shared_alloc=True``
+    derives one priority allocation from the union of all tables' sizes
+    (the paper's workload-knowledge model, §4) so a same-length sweep
+    compiles exactly once. With chunking/sharding/streaming off, results
+    are bit-identical to sequential :func:`simulate` calls.
+
+    The pre-SweepSpec keyword signature (``tables`` as a list, ``seeds``/
+    ``workload``/``load``/``alloc``/... as loose kwargs) still works as a
+    thin shim, emits :class:`DeprecationWarning`, and is bit-identical to
+    the equivalent spec.
     """
-    if tables is None:
-        if seeds is None or workload is None or load is None:
-            raise ValueError("run_sweep needs `tables` or "
-                             "(`seeds`, `workload`, `load`)")
-        tables = [make_messages(workload, n_hosts=cfg.n_hosts, load=load,
-                                n_messages=n_messages,
-                                slot_bytes=cfg.slot_bytes, seed=s)
-                  for s in seeds]
-    if not tables:
-        return []
-    M0 = len(tables[0].size)
-    if any(len(t.size) != M0 for t in tables):
-        raise ValueError("run_sweep requires tables of identical length "
-                         f"(got {[len(t.size) for t in tables]})")
-
-    proto = get_protocol(cfg.protocol)
-    if shared_alloc and alloc is None:
-        alloc = allocate_priorities(
-            np.concatenate([t.size for t in tables]),
-            unsched_limit=cfg.rtt_bytes, n_prios=cfg.n_prios)
-    N = len(tables)
-    allocs = list(alloc) if isinstance(alloc, (list, tuple)) \
-        else [alloc] * N
-    uls = list(unsched_limit_bytes) \
-        if isinstance(unsched_limit_bytes, (list, tuple)) \
-        else [unsched_limit_bytes] * N
-    if len(allocs) != N or len(uls) != N:
-        raise ValueError("per-table alloc/unsched_limit lists must match "
-                         "the number of tables")
-    prepped = []
-    for t, al_i, ul_i in zip(tables, allocs, uls):
-        S, al = prepare(cfg, t, al_i, ul_i)
-        prepped.append((S, al, proto.n_sched(cfg, al)))
-
-    # group by the static scan parameter; usually one group per sweep
-    groups: dict[int, list[int]] = {}
-    for i, (_, _, ns) in enumerate(prepped):
-        groups.setdefault(ns, []).append(i)
-
-    results: list[SimResult | None] = [None] * len(tables)
-    for n_sched, idxs in groups.items():
-        S_stack = jax.tree.map(lambda *xs: jnp.stack(xs),
-                               *[prepped[i][0] for i in idxs])
-        st_batch = jax.tree.map(np.asarray,
-                                _run_batch(cfg, proto, S_stack, n_sched))
-        for k, i in enumerate(idxs):
-            st_i = jax.tree.map(lambda x: x[k], st_batch)
-            results[i] = _finalize(cfg, tables[i], prepped[i][0],
-                                   prepped[i][1], st_i, return_state,
-                                   reduce_trace=True)
-    return results
+    from repro.core import sweep as sweep_mod
+    if isinstance(spec, sweep_mod.SweepSpec):
+        return sweep_mod.run_spec(cfg, spec)
+    warnings.warn(
+        "run_sweep(cfg, tables, seeds=..., ...) is deprecated; pass a "
+        "single SweepSpec instead: run_sweep(cfg, SweepSpec(...))",
+        DeprecationWarning, stacklevel=2)
+    legacy = sweep_mod.SweepSpec(
+        tables=tuple(spec) if spec is not None else None,
+        seeds=tuple(seeds) if seeds is not None else None,
+        workload=workload, load=load, n_messages=n_messages,
+        alloc=alloc, unsched_limit_bytes=unsched_limit_bytes,
+        shared_alloc=shared_alloc, return_state=return_state)
+    return sweep_mod.run_spec(cfg, legacy)
 
 
 def run_sim(cfg: SimConfig, table: MessageTable,
             alloc: PriorityAllocation | None = None,
             unsched_limit_bytes=None, return_state: bool = False) -> dict:
-    """Legacy compatibility shim: :func:`simulate` as a raw dict."""
+    """Deprecated dict-returning shim around :func:`simulate` (one
+    release of grace): same numbers, legacy schema."""
+    warnings.warn(
+        "run_sim is deprecated; call simulate(cfg, table) and use the "
+        "structured SimResult (`.to_legacy_dict()` bridges old code)",
+        DeprecationWarning, stacklevel=2)
     return simulate(cfg, table, alloc, unsched_limit_bytes,
                     return_state).to_legacy_dict()
 
@@ -587,3 +571,12 @@ __all__ = ["SimConfig", "FabricConfig", "TraceConfig", "SimTrace",
            "simulate", "run_sweep", "run_sim",
            "slowdown_percentiles", "prepare", "step_fn", "SimResult",
            "registered_protocols"]
+
+
+def __getattr__(name):
+    # late-bound so `from repro.core.sim import SweepSpec` works without
+    # importing the sweep engine at module load (sweep imports sim)
+    if name in ("SweepSpec", "StreamSpec", "SweepStats"):
+        from repro.core import sweep as sweep_mod
+        return getattr(sweep_mod, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -444,6 +444,22 @@ def finalize_trace(cfg, st: dict, timings: dict | None = None) -> SimTrace:
     )
 
 
+def reduce_state(cfg, st: dict) -> dict:
+    """Device-side trace reduction for streaming sweeps (DESIGN.md §9):
+    the :meth:`SimTrace.reduce` peaks/counts computed INSIDE the compiled
+    program, so sharded mega-sweeps gather a handful of trace scalars per
+    run instead of the ``(T, H)`` series. Works unchanged under chunked
+    scans — the strided rows are written by global slot index, so the
+    series (and therefore its max) is identical to the flat scan's."""
+    out = {"tr_q_peak": st["tr_q"].max(),
+           "tr_go_peak": st["tr_grant_out"].max()}
+    if cfg.fabric_on:
+        out["tr_uq_peak"] = st["tr_uq"].max()
+    if cfg.ledger_on:
+        out["tr_ev_seen"] = st["tr_ev_n"]
+    return out
+
+
 # ------------------------------------------------------------- wall clock --
 
 def timed_aot_run(jit_fn, all_args: tuple, dynamic_args: tuple,
@@ -474,6 +490,7 @@ def timed_aot_run(jit_fn, all_args: tuple, dynamic_args: tuple,
 
 
 __all__ = ["TraceConfig", "SimTrace", "init_trace_state", "snapshot",
-           "capture_slot", "finalize_trace", "timed_aot_run", "n_samples",
+           "capture_slot", "finalize_trace", "reduce_state",
+           "timed_aot_run", "n_samples",
            "EV_GRANT", "EV_PREEMPT", "EV_LOSS", "EV_OVERFLOW", "EV_RESEND",
            "EV_TIMEOUT", "EV_COMPLETE", "EV_NAMES", "EV_COLUMNS"]

@@ -14,8 +14,8 @@ from pathlib import Path
 import numpy as np
 import pytest
 
-from repro.core import (SimConfig, FabricConfig, simulate, run_sweep,
-                        make_messages)
+from repro.core import (SimConfig, FabricConfig, SweepSpec, simulate,
+                        run_sweep, make_messages)
 from repro.kernels.arbiter import dispatch
 
 GOLDEN = Path(__file__).parent / "golden"
@@ -91,7 +91,7 @@ def test_pallas_sweep_bit_identical_to_reference():
     pal_cfg = SimConfig(protocol="homa", n_hosts=8, max_slots=2000,
                         ring_cap=256, backend="pallas")
     seq = [simulate(ref_cfg, t) for t in tables]
-    swe = run_sweep(pal_cfg, tables)
+    swe = run_sweep(pal_cfg, SweepSpec(tables=tables))
     for a, b in zip(seq, swe):
         np.testing.assert_array_equal(a.completion, b.completion)
         np.testing.assert_array_equal(a.q_max_bytes, b.q_max_bytes)

@@ -10,8 +10,8 @@ from pathlib import Path
 import numpy as np
 import pytest
 
-from repro.core import (SimConfig, FabricConfig, simulate, run_sweep,
-                        make_messages, scenarios)
+from repro.core import (SimConfig, FabricConfig, SweepSpec, simulate,
+                        run_sweep, make_messages, scenarios)
 
 GOLDEN = Path(__file__).parent / "golden" / "fabric_disabled.json"
 ALL_PROTOS = ["homa", "basic", "phost", "pias", "pfabric", "ndp"]
@@ -151,7 +151,7 @@ def test_fabric_composes_with_run_sweep():
     tables = [make_messages("W2", n_hosts=16, load=0.6, n_messages=120,
                             slot_bytes=256, seed=s) for s in range(3)]
     seq = [simulate(cfg, t) for t in tables]
-    swe = run_sweep(cfg, tables)
+    swe = run_sweep(cfg, SweepSpec(tables=tables))
     for a, b in zip(seq, swe):
         np.testing.assert_array_equal(a.completion, b.completion)
         np.testing.assert_array_equal(a.tor_up_q_max_bytes,

@@ -18,8 +18,8 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st_
 
-from repro.core import (SimConfig, FabricConfig, FaultConfig, simulate,
-                        run_sweep, make_messages, scenarios)
+from repro.core import (SimConfig, FabricConfig, FaultConfig, SweepSpec,
+                        simulate, run_sweep, make_messages, scenarios)
 from repro.core.faults import link_down_mask, host_down_mask
 
 ALL_PROTOS = ["homa", "basic", "phost", "pias", "pfabric", "ndp"]
@@ -201,7 +201,7 @@ def test_faults_compose_with_run_sweep():
     tables = [make_messages("W2", n_hosts=16, load=0.6, n_messages=120,
                             slot_bytes=256, seed=s) for s in range(3)]
     seq = [simulate(cfg, t, return_state=True) for t in tables]
-    swe = run_sweep(cfg, tables, return_state=True)
+    swe = run_sweep(cfg, SweepSpec(tables=tables, return_state=True))
     for a, b in zip(seq, swe):
         np.testing.assert_array_equal(a.completion, b.completion)
         np.testing.assert_array_equal(a.retx_chunks, b.retx_chunks)

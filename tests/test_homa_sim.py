@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.sim import SimConfig, run_sim
+from repro.core.sim import SimConfig, simulate
 from repro.core.workloads import MessageTable, make_messages, sample_sizes
 from repro.core.priorities import (allocate_priorities, equal_bytes_cutoffs,
                                    pias_thresholds)
@@ -33,11 +33,11 @@ def test_conservation_and_completion(proto, load):
     tbl = make_messages("W2", n_hosts=4, load=load, n_messages=300,
                         slot_bytes=256, seed=5)
     cfg = SimConfig(protocol=proto, **SMALL)
-    stx = run_sim(cfg, tbl, return_state=True)
-    st, S = stx["state"], stx["static"]
+    res = simulate(cfg, tbl, return_state=True)
+    st, S = res.state, res.static
     # no chunk created or destroyed: recv + in-buffer + lost == sent
     in_buf = int(st["r_valid"].sum())
-    assert int(st["recv"].sum()) + in_buf + stx["lost_chunks"] \
+    assert int(st["recv"].sum()) + in_buf + res.lost_chunks \
         == int(st["sent"].sum())
     # receivers never got more than the message size
     assert (st["recv"] <= S["size"]).all()
@@ -55,8 +55,8 @@ def test_grant_invariant_rtt_bound():
     tbl = make_messages("W4", n_hosts=4, load=0.7, n_messages=200,
                         slot_bytes=256, seed=6)
     cfg = SimConfig(protocol="homa", **SMALL)
-    stx = run_sim(cfg, tbl, return_state=True)
-    st = stx["state"]
+    res = simulate(cfg, tbl, return_state=True)
+    st = res.state
     outstanding = st["grant_r"] - st["recv"]
     assert (outstanding <= cfg.rtt_slots).all()
 
@@ -71,9 +71,9 @@ def test_unloaded_slowdown_near_one():
     # fix dst != src
     tbl.dst[tbl.dst == tbl.src] = (tbl.src[tbl.dst == tbl.src] + 1) % 4
     cfg = SimConfig(protocol="homa", n_hosts=4, max_slots=30_000)
-    stx = run_sim(cfg, tbl)
-    sl = stx["slowdown"][stx["done"]]
-    assert stx["n_complete"] >= n - 2
+    res = simulate(cfg, tbl)
+    sl = res.slowdown[res.done]
+    assert res.n_complete >= n - 2
     assert np.nanmedian(sl) <= 1.05
     assert np.nanpercentile(sl, 99) <= 1.3
 
@@ -83,9 +83,9 @@ def test_srpt_shorter_message_wins():
     first even though the long one started earlier."""
     tbl = table_from([1, 2], [0, 0], [200_000, 2_000], [0, 120])
     cfg = SimConfig(protocol="homa", n_hosts=4, max_slots=6000)
-    stx = run_sim(cfg, tbl)
-    assert stx["done"].all()
-    assert stx["completion"][1] < stx["completion"][0]
+    res = simulate(cfg, tbl)
+    assert res.done.all()
+    assert res.completion[1] < res.completion[0]
 
 
 def test_overcommitment_fills_idle_downlink():
@@ -102,9 +102,9 @@ def test_overcommitment_fills_idle_downlink():
     for k in (1, 4):
         cfg = SimConfig(protocol="homa", overcommit=k, n_hosts=4,
                         max_slots=3000)
-        stx = run_sim(cfg, tbl)
-        assert stx["done"].all()
-        m2_done[k] = int(stx["completion"][2])
+        res = simulate(cfg, tbl)
+        assert res.done.all()
+        m2_done[k] = int(res.completion[2])
     # with overcommitment m2 streams concurrently instead of waiting for
     # m0's run-to-completion -> finishes much earlier
     assert m2_done[4] * 1.5 < m2_done[1], m2_done
@@ -117,9 +117,9 @@ def test_homa_beats_basic_tail_latency():
     for proto in ("homa", "basic"):
         cfg = SimConfig(protocol=proto, n_hosts=4, max_slots=25_000,
                         ring_cap=1024)
-        stx = run_sim(cfg, tbl)
-        ok = stx["done"] & (stx["size_bytes"] < 3000)
-        p99[proto] = np.percentile(stx["slowdown"][ok], 99)
+        res = simulate(cfg, tbl)
+        ok = res.done & (res.size_bytes < 3000)
+        p99[proto] = np.percentile(res.slowdown[ok], 99)
     assert p99["homa"] * 2 < p99["basic"], p99
 
 
@@ -130,10 +130,10 @@ def test_incast_unsched_limit_bounds_buffers():
     tbl = table_from(np.arange(n) % 3 + 1, np.zeros(n), np.full(n, 9728),
                      np.zeros(n))
     cfg = SimConfig(protocol="homa", n_hosts=4, max_slots=4000)
-    free = run_sim(cfg, tbl)
-    lim = run_sim(cfg, tbl, unsched_limit_bytes=512)
-    assert lim["q_max_bytes"][0] < free["q_max_bytes"][0]
-    assert lim["done"].all()
+    free = simulate(cfg, tbl)
+    lim = simulate(cfg, tbl, unsched_limit_bytes=512)
+    assert lim.q_max_bytes[0] < free.q_max_bytes[0]
+    assert lim.done.all()
 
 
 # ------------------------------------------------- priority allocation -----

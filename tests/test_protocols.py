@@ -3,8 +3,9 @@ and the vmapped multi-seed sweep runner (bit-identity + single-trace)."""
 import numpy as np
 import pytest
 
-from repro.core import (SimConfig, SimResult, simulate, run_sweep, run_sim,
-                        get_protocol, registered_protocols, make_messages)
+from repro.core import (SimConfig, SimResult, SweepSpec, simulate,
+                        run_sweep, run_sim, get_protocol,
+                        registered_protocols, make_messages)
 from repro.core import sim as sim_mod
 from repro.core.protocols import Protocol, register, _REGISTRY
 
@@ -70,11 +71,12 @@ def test_simresult_fields_and_summary():
     assert json.loads(res.to_json())["n_messages"] == 150
 
 
-def test_run_sim_shim_matches_simulate():
+def test_run_sim_shim_warns_and_matches_simulate():
     tbl = make_messages("W3", n_hosts=4, load=0.7, n_messages=120,
                         slot_bytes=256, seed=2)
     cfg = SimConfig(protocol="homa", **SMALL)
-    d = run_sim(cfg, tbl)
+    with pytest.warns(DeprecationWarning, match="run_sim is deprecated"):
+        d = run_sim(cfg, tbl)
     r = simulate(cfg, tbl)
     np.testing.assert_array_equal(d["completion"], r.completion)
     np.testing.assert_array_equal(d["done"], r.done)
@@ -90,19 +92,34 @@ def test_sweep_bit_identical_to_sequential(proto):
     cfg = SimConfig(protocol=proto, **SMALL)
     tables = [make_messages("W2", n_hosts=4, load=0.6, n_messages=100,
                             slot_bytes=256, seed=s) for s in range(3)]
-    seq = [run_sim(cfg, t) for t in tables]
-    swe = run_sweep(cfg, tables)
+    seq = [simulate(cfg, t) for t in tables]
+    swe = run_sweep(cfg, SweepSpec(tables=tables))
     for a, b in zip(seq, swe):
-        np.testing.assert_array_equal(a["completion"], b.completion)
-        np.testing.assert_array_equal(a["done"], b.done)
-        np.testing.assert_array_equal(a["prio_drained_bytes"],
+        np.testing.assert_array_equal(a.completion, b.completion)
+        np.testing.assert_array_equal(a.done, b.done)
+        np.testing.assert_array_equal(a.prio_drained_bytes,
                                       b.prio_drained_bytes)
-        np.testing.assert_array_equal(a["q_max_bytes"], b.q_max_bytes)
-        np.testing.assert_array_equal(a["q_mean_bytes"], b.q_mean_bytes)
-        ok = np.isfinite(a["slowdown"])
+        np.testing.assert_array_equal(a.q_max_bytes, b.q_max_bytes)
+        np.testing.assert_array_equal(a.q_mean_bytes, b.q_mean_bytes)
+        ok = np.isfinite(a.slowdown)
         np.testing.assert_array_equal(ok, np.isfinite(b.slowdown))
-        np.testing.assert_array_equal(a["slowdown"][ok], b.slowdown[ok])
-        assert a["lost_chunks"] == b.lost_chunks
+        np.testing.assert_array_equal(a.slowdown[ok], b.slowdown[ok])
+        assert a.lost_chunks == b.lost_chunks
+
+
+def test_legacy_sweep_kwargs_warn_and_match_spec():
+    """The pre-SweepSpec signature survives as a shim: DeprecationWarning
+    plus bit-identical results to the equivalent spec."""
+    cfg = SimConfig(protocol="homa", **SMALL)
+    tables = [make_messages("W2", n_hosts=4, load=0.6, n_messages=100,
+                            slot_bytes=256, seed=s) for s in range(2)]
+    with pytest.warns(DeprecationWarning, match="SweepSpec"):
+        legacy = run_sweep(cfg, tables, shared_alloc=True)
+    spec = run_sweep(cfg, SweepSpec(tables=tables, shared_alloc=True))
+    for a, b in zip(legacy, spec):
+        np.testing.assert_array_equal(a.completion, b.completion)
+        np.testing.assert_array_equal(a.slowdown[a.done],
+                                      b.slowdown[b.done])
 
 
 def test_sweep_single_trace_with_shared_alloc():
@@ -111,7 +128,7 @@ def test_sweep_single_trace_with_shared_alloc():
     tables = [make_messages("W1", n_hosts=4, load=0.8, n_messages=100,
                             slot_bytes=256, seed=s) for s in range(8)]
     before = sim_mod._run_batch._cache_size()
-    res = run_sweep(cfg, tables, shared_alloc=True)
+    res = run_sweep(cfg, SweepSpec(tables=tables, shared_alloc=True))
     assert sim_mod._run_batch._cache_size() == before + 1
     assert len(res) == 8
     assert all(r.n_complete > 0 for r in res)
@@ -127,27 +144,48 @@ def test_sweep_per_table_alloc_and_unsched_limit():
     allocs = [allocate_priorities(sizes, unsched_limit=9728,
                                   force_unsched=nu) for nu in (1, 7)]
     cfg = SimConfig(protocol="homa", overcommit=1, **SMALL)
-    swe = run_sweep(cfg, [tbl, tbl], alloc=allocs)
+    swe = run_sweep(cfg, SweepSpec(tables=[tbl, tbl], alloc=allocs))
     seq = [simulate(cfg, tbl, alloc=a) for a in allocs]
     for a, b in zip(seq, swe):
         np.testing.assert_array_equal(a.completion, b.completion)
     # and per-table unscheduled limits (fig10 incast-control pattern)
-    swe = run_sweep(cfg, [tbl, tbl], unsched_limit_bytes=[None, 512])
+    swe = run_sweep(cfg, SweepSpec(tables=[tbl, tbl],
+                                   unsched_limit_bytes=[None, 512]))
     seq = [simulate(cfg, tbl), simulate(cfg, tbl, unsched_limit_bytes=512)]
     for a, b in zip(seq, swe):
         np.testing.assert_array_equal(a.completion, b.completion)
 
 
-def test_sweep_rejects_mismatched_tables():
+def test_sweep_mixed_lengths_group_not_reject():
+    """Mixed-length tables are legal under SweepSpec: runs group by
+    (length, n_sched) and come back in input order (the old runner
+    rejected them outright)."""
     cfg = SimConfig(protocol="homa", **SMALL)
     t1 = make_messages("W1", n_hosts=4, load=0.5, n_messages=50,
                        slot_bytes=256, seed=0)
     t2 = make_messages("W1", n_hosts=4, load=0.5, n_messages=60,
                        slot_bytes=256, seed=0)
-    with pytest.raises(ValueError, match="identical length"):
-        run_sweep(cfg, [t1, t2])
+    swe = run_sweep(cfg, SweepSpec(tables=[t1, t2, t1]))
+    seq = [simulate(cfg, t) for t in (t1, t2, t1)]
+    for a, b in zip(seq, swe):
+        np.testing.assert_array_equal(a.completion, b.completion)
+
+
+def test_sweep_spec_validation():
+    cfg = SimConfig(protocol="homa", **SMALL)
+    tbl = make_messages("W1", n_hosts=4, load=0.5, n_messages=50,
+                        slot_bytes=256, seed=0)
     with pytest.raises(ValueError, match="tables"):
-        run_sweep(cfg)
+        SweepSpec()
+    with pytest.raises(ValueError, match="tables"):
+        with pytest.warns(DeprecationWarning):
+            run_sweep(cfg)
+    with pytest.raises(ValueError, match="chunk_slots"):
+        SweepSpec(tables=[tbl], chunk_slots=0)
+    with pytest.raises(ValueError, match="return_state"):
+        SweepSpec(tables=[tbl], streaming=True, return_state=True)
+    with pytest.raises(ValueError, match="alloc"):
+        run_sweep(cfg, SweepSpec(tables=[tbl], alloc=[None, None]))
 
 
 def test_sweep_faster_than_sequential_with_fresh_traces():
@@ -163,13 +201,13 @@ def test_sweep_faster_than_sequential_with_fresh_traces():
     for t in tables:
         cfg = SimConfig(n_hosts=8, protocol="homa", ring_cap=256,
                         max_slots=int(t.arrival_slot.max()) + 600)
-        run_sim(cfg, t)
+        simulate(cfg, t)
     seq_s = time.perf_counter() - t0
     horizon = max(int(t.arrival_slot.max()) for t in tables) + 600
     cfg = SimConfig(n_hosts=8, protocol="homa", ring_cap=256,
                     max_slots=horizon)
     t0 = time.perf_counter()
-    res = run_sweep(cfg, tables, shared_alloc=True)
+    res = run_sweep(cfg, SweepSpec(tables=tables, shared_alloc=True))
     sweep_s = time.perf_counter() - t0
     assert all(r.n_complete == 300 for r in res)
     assert sweep_s < 0.75 * seq_s, (sweep_s, seq_s)

@@ -1,0 +1,243 @@
+"""SweepSpec engine tests (DESIGN.md §9): streaming-percentile accuracy
+(hypothesis property + simulator-level tolerance), chunked-scan and
+device-sharding bit-identity for every protocol, grouping, and the
+8-virtual-device recipe (subprocess, ``XLA_FLAGS``)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (SimConfig, SweepSpec, StreamSpec, SweepStats,
+                        TraceConfig, simulate, run_sweep, make_messages)
+from repro.core import sweep as sweep_mod
+
+ALL_PROTOS = ["homa", "basic", "phost", "pias", "pfabric", "ndp"]
+SMALL = dict(n_hosts=4, max_slots=1500, ring_cap=256)
+
+
+def _tables(n=2, n_messages=100, seed0=0, n_hosts=4):
+    return [make_messages("W2", n_hosts=n_hosts, load=0.6,
+                          n_messages=n_messages, slot_bytes=256, seed=seed0 + s)
+            for s in range(n)]
+
+
+# ------------------------------------------------------------ StreamSpec --
+
+def test_streamspec_validation():
+    with pytest.raises(ValueError, match="n_buckets"):
+        StreamSpec(n_buckets=1)
+    with pytest.raises(ValueError, match="max_slowdown"):
+        StreamSpec(max_slowdown=1.0)
+    with pytest.raises(ValueError, match="small_bytes"):
+        StreamSpec(small_bytes=999)          # not a size-bucket edge
+    with pytest.raises(ValueError, match="increasing"):
+        StreamSpec(size_edges=(1000, 256))
+    with pytest.raises(ValueError, match="warmup_frac"):
+        StreamSpec(warmup_frac=1.0)
+    s = StreamSpec()
+    assert s.rel_err_bound < 0.01            # defaults: ~0.9%
+    assert hash(s)                           # must ride the jit cache key
+
+
+def test_shard_knob_validation():
+    assert sweep_mod.resolve_devices(False) == 1
+    assert sweep_mod.resolve_devices(1) == 1
+    with pytest.raises(ValueError, match="devices"):
+        sweep_mod.resolve_devices(10_000)
+
+
+def test_group_runs_preserves_order():
+    groups = sweep_mod.group_runs([(100, 4), (80, 4), (100, 4), (80, 2)])
+    assert groups == {(100, 4): [0, 2], (80, 4): [1], (80, 2): [3]}
+
+
+# ------------------------------------------- streaming estimator (host) --
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10_000), st.integers(5, 400), st.floats(1.0, 40.0))
+def test_streaming_percentile_property(seed, n, spread):
+    """Over ragged slowdown distributions, the streaming estimate is
+    within ``rel_err_bound`` of the same-rank (lower) order statistic —
+    the estimator's documented contract — for every quantile."""
+    rng = np.random.default_rng(seed)
+    # ragged mix: point mass at 1.0 + lognormal tail, occasionally huge
+    sd = 1.0 + rng.lognormal(0.0, 1.0, n) * (spread - 1.0) / 40.0
+    sd[rng.random(n) < 0.3] = 1.0
+    stream = StreamSpec()
+    hist = sweep_mod.streaming_hist(sd, stream)
+    assert hist.sum() == n
+    s_sorted = np.sort(sd.astype(np.float32))
+    for q in (10.0, 50.0, 90.0, 99.0):
+        est = sweep_mod.percentile_from_hist(hist, stream, q)
+        lower = float(s_sorted[int(np.floor(q / 100 * (n - 1)))])
+        assert abs(est - lower) / lower <= stream.rel_err_bound + 1e-6, \
+            (q, est, lower)
+
+
+def test_streaming_percentile_empty_and_overflow():
+    stream = StreamSpec(n_buckets=64, max_slowdown=100.0)
+    assert sweep_mod.percentile_from_hist(
+        np.zeros(64, np.int64), stream, 99) is None
+    # samples beyond max_slowdown land in (and report) the last bucket
+    hist = sweep_mod.streaming_hist([1e9], stream)
+    assert hist[-1] == 1
+    est = sweep_mod.percentile_from_hist(hist, stream, 50)
+    assert est >= 100.0 / stream.bucket_ratio
+
+
+# -------------------------------------------------- simulator tolerance --
+
+def test_streaming_matches_exact_within_tolerance():
+    """The acceptance gate: streaming sweep percentiles vs the exact
+    (non-streaming) run, within the documented bound against the lower
+    order statistic and a looser envelope vs numpy's interpolation."""
+    cfg = SimConfig(protocol="homa", n_hosts=4, max_slots=6000,
+                    ring_cap=512)
+    tbls = _tables(n=2, n_messages=600)
+    exact = run_sweep(cfg, SweepSpec(tables=tbls))
+    stream = StreamSpec()
+    stats = run_sweep(cfg, SweepSpec(tables=tbls, streaming=stream,
+                                     chunk_slots=512))
+    for stt, ref in zip(stats, exact):
+        assert isinstance(stt, SweepStats)
+        assert stt.n_complete == ref.n_complete
+        sd = np.sort(ref.slowdown[ref.done].astype(np.float32))
+        n = len(sd)
+        for q in (50.0, 90.0, 99.0):
+            est = stt.percentile(q)
+            lower = float(sd[int(np.floor(q / 100 * (n - 1)))])
+            assert abs(est - lower) / lower \
+                <= stream.rel_err_bound + 1e-6, (q, est, lower)
+            # vs interpolated numpy: the provable envelope is the
+            # estimator bound plus the bracketing order-statistic gap
+            # (interp lies between sorted[k] and sorted[k+1])
+            interp = float(np.percentile(sd, q))
+            upper = float(sd[min(int(np.ceil(q / 100 * (n - 1))), n - 1)])
+            envelope = stream.rel_err_bound * lower + (upper - lower)
+            assert abs(est - interp) <= envelope + 1e-6, \
+                (q, est, interp, envelope)
+        # device histogram == host mirror on the exact run's slowdowns
+        np.testing.assert_array_equal(
+            stt.hist.sum(axis=0),
+            sweep_mod.streaming_hist(ref.slowdown[ref.done], stream))
+        # small-message split is exact (small_bytes is a bucket edge)
+        small = ref.done & (ref.size_bytes < stream.small_bytes)
+        assert stt.hist[:2].sum() == int(small.sum())
+        s = stt.summary()
+        assert s["p99_small"] is not None
+        assert s["streaming"]["rel_err_bound"] == round(
+            stream.rel_err_bound, 6)
+
+
+def test_streaming_warmup_trims_head():
+    cfg = SimConfig(protocol="homa", **SMALL)
+    (tbl,) = _tables(n=1)
+    stream = StreamSpec(warmup_frac=0.5)
+    stt = run_sweep(cfg, SweepSpec(tables=(tbl,), streaming=stream))[0]
+    ref = simulate(cfg, tbl)
+    counted = np.zeros(len(tbl.size), bool)
+    counted[len(tbl.size) // 2:] = True
+    assert stt.n_counted == int((ref.done & counted).sum())
+    assert stt.n_complete == ref.n_complete      # completions still total
+
+
+# ------------------------------------------------- bit-identity matrix --
+
+@pytest.mark.parametrize("proto", ALL_PROTOS)
+def test_chunked_scan_bit_identical(proto):
+    """chunk_slots nests the scan but replays the same step sequence —
+    results must be bit-identical, including a non-dividing remainder
+    chunk (1500 % 400 != 0)."""
+    cfg = SimConfig(protocol=proto, **SMALL)
+    tbls = _tables(n=2)
+    base = run_sweep(cfg, SweepSpec(tables=tbls))
+    for chunk in (400, 1500, 5000):
+        got = run_sweep(cfg, SweepSpec(tables=tbls, chunk_slots=chunk))
+        for a, b in zip(base, got):
+            np.testing.assert_array_equal(a.completion, b.completion)
+            np.testing.assert_array_equal(a.q_max_bytes, b.q_max_bytes)
+            np.testing.assert_array_equal(a.prio_drained_bytes,
+                                          b.prio_drained_bytes)
+            assert a.lost_chunks == b.lost_chunks
+
+
+@pytest.mark.parametrize("proto", ALL_PROTOS)
+def test_sharded_path_bit_identical(proto):
+    """shard=True routes through the shard_map runner (padded to a
+    device multiple) — bit-identical to the default vmap path."""
+    cfg = SimConfig(protocol=proto, **SMALL)
+    tbls = _tables(n=3)          # odd count: exercises padding
+    base = run_sweep(cfg, SweepSpec(tables=tbls))
+    got = run_sweep(cfg, SweepSpec(tables=tbls, shard=True,
+                                   chunk_slots=500))
+    for a, b in zip(base, got):
+        np.testing.assert_array_equal(a.completion, b.completion)
+        np.testing.assert_array_equal(a.slowdown[a.done],
+                                      b.slowdown[b.done])
+
+
+def test_chunked_trace_bit_identical():
+    """Telemetry rows are indexed by global slot, so strided series and
+    ledger survive chunking unchanged; streaming sweeps reduce the trace
+    device-side to the same peaks SimTrace.reduce() reports."""
+    cfg = SimConfig(protocol="homa", trace=TraceConfig(stride=16,
+                                                       ledger_cap=256),
+                    **SMALL)
+    (tbl,) = _tables(n=1)
+    ref = simulate(cfg, tbl)
+    chunked = run_sweep(cfg, SweepSpec(tables=(tbl,), chunk_slots=333))[0]
+    assert chunked.trace_summary["q_peak_bytes"] \
+        == ref.trace_summary["q_peak_bytes"]
+    assert chunked.trace_summary["n_events_seen"] \
+        == ref.trace_summary["n_events_seen"]
+    stt = run_sweep(cfg, SweepSpec(tables=(tbl,), chunk_slots=333,
+                                   streaming=True))[0]
+    ts = stt.trace_summary
+    assert ts["q_peak_bytes"] == ref.trace_summary["q_peak_bytes"]
+    assert ts["grant_out_peak_bytes"] \
+        == ref.trace_summary["grant_out_peak_bytes"]
+    assert ts["n_events_seen"] == ref.trace_summary["n_events_seen"]
+    assert ts["events_dropped"] == ref.trace_summary["events_dropped"]
+
+
+# --------------------------------------------------- multi-device (sub) --
+
+def test_eight_virtual_devices_bit_identical():
+    """The README recipe end-to-end: force 8 host devices in a fresh
+    interpreter (XLA_FLAGS must precede jax import), shard a sweep over
+    them, and require bit-identity — exact completions AND streaming
+    histograms — with the single-device run."""
+    prog = textwrap.dedent("""
+        import numpy as np, jax
+        from repro.core import SimConfig, SweepSpec, make_messages
+        from repro.core.sim import run_sweep
+        assert len(jax.devices()) == 8, jax.devices()
+        cfg = SimConfig(n_hosts=4, max_slots=1200, ring_cap=256,
+                        protocol="homa")
+        tbls = [make_messages("W1", n_hosts=4, load=0.6, n_messages=80,
+                              slot_bytes=256, seed=s) for s in range(6)]
+        one = run_sweep(cfg, SweepSpec(tables=tbls))
+        many = run_sweep(cfg, SweepSpec(tables=tbls, shard=8,
+                                        chunk_slots=300))
+        for a, b in zip(one, many):
+            np.testing.assert_array_equal(a.completion, b.completion)
+        s1 = run_sweep(cfg, SweepSpec(tables=tbls, streaming=True))
+        s8 = run_sweep(cfg, SweepSpec(tables=tbls, streaming=True,
+                                      shard=8, chunk_slots=300))
+        for a, b in zip(s1, s8):
+            np.testing.assert_array_equal(a.hist, b.hist)
+        print("OK")
+    """)
+    env = {**os.environ,
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+           "PYTHONPATH": "src"}
+    r = subprocess.run([sys.executable, "-c", prog], env=env,
+                       capture_output=True, text=True, timeout=900,
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))))
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK" in r.stdout

@@ -3,7 +3,7 @@
 training stack smoke (config -> data -> step -> checkpoint)."""
 import numpy as np
 
-from repro.core.sim import SimConfig, run_sim
+from repro.core.sim import SimConfig, simulate
 from repro.core.workloads import make_messages
 
 
@@ -16,21 +16,21 @@ def test_end_to_end_homa_pipeline():
                         slot_bytes=256, seed=11)
     cfg = SimConfig(n_hosts=6, protocol="homa", max_slots=40_000,
                     ring_cap=2048)
-    st = run_sim(cfg, tbl, return_state=True)
+    res = simulate(cfg, tbl, return_state=True)
     # allocation reflects the workload's byte-weighted CDF (our W2
     # synthesis is heavier-tailed than the paper's — see EXPERIMENTS notes —
     # so it earns fewer unscheduled levels than the paper's ~6)
-    assert 1 <= st["alloc"].n_unsched <= 7
+    assert 1 <= res.alloc.n_unsched <= 7
     # lossless
-    assert st["lost_chunks"] == 0
+    assert res.lost_chunks == 0
     # conservation
-    s = st["state"]
+    s = res.state
     assert int(s["recv"].sum()) + int(s["r_valid"].sum()) \
         == int(s["sent"].sum())
     # small-message tail near ideal
-    ok = st["done"] & (st["size_bytes"] < 1000)
+    ok = res.done & (res.size_bytes < 1000)
     assert ok.sum() > 50
-    p99 = np.percentile(st["slowdown"][ok], 99)
+    p99 = np.percentile(res.slowdown[ok], 99)
     assert p99 < 3.5, p99
-    med = np.median(st["slowdown"][st["done"]])
+    med = np.median(res.slowdown[res.done])
     assert med < 1.5, med

@@ -17,7 +17,7 @@ import pytest
 from hypothesis import given, settings, strategies as st_
 
 from repro.core import (SimConfig, FabricConfig, TraceConfig, SimTrace,
-                        simulate, run_sweep, make_messages)
+                        SweepSpec, simulate, run_sweep, make_messages)
 from repro.core import telemetry
 from repro.core.results import SimResult, bucketed_percentiles
 from repro.core.telemetry import (EV_GRANT, EV_PREEMPT, EV_LOSS,
@@ -224,7 +224,7 @@ def test_run_sweep_reduces_trace_to_scalars():
                     max_slots=2000,
                     trace=TraceConfig(stride=32, ledger_cap=256))
     solo = [simulate(cfg, t) for t in tables]
-    swept = run_sweep(cfg, tables)
+    swept = run_sweep(cfg, SweepSpec(tables=tables))
     for a, b in zip(solo, swept):
         np.testing.assert_array_equal(a.completion, b.completion)
         assert b.trace is None
