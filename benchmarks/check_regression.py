@@ -38,6 +38,7 @@ WALL_FIELDS = {
     "fig10_incast": {},
     "fabric_smoke": {},
     "faults_smoke": {},
+    "hostmodel_smoke": {},
     # telemetry CI cell: capture shape (event counts, overflow, samples,
     # perfetto size) gates exactly; wall times and the derived overhead
     # percentage only within a generous factor (machine speed / noise —

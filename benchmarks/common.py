@@ -17,6 +17,7 @@ Two entry points, both returning the same JSON-safe summary schema
 """
 from __future__ import annotations
 
+import dataclasses
 import hashlib
 import json
 from pathlib import Path
@@ -26,7 +27,8 @@ import numpy as np
 from repro.core.sim import SimConfig, simulate, run_sweep
 from repro.core.sweep import SweepSpec
 from repro.core.fabric import FabricConfig
-from repro.core.workloads import make_messages
+from repro.core.hostmodel import HostConfig
+from repro.core.workloads import WorkloadSpec, make_messages
 from repro.core import scenarios
 from repro.core.priorities import PriorityAllocation
 
@@ -53,10 +55,42 @@ def _fabric_cfg(fabric: dict | None) -> FabricConfig | None:
     return FabricConfig(**fabric) if fabric else None
 
 
+def _host_key(host) -> str | dict | None:
+    """Host spec -> its JSON-able cache-key form (preset name, kwargs
+    dict, or a full HostConfig flattened to kwargs)."""
+    if isinstance(host, HostConfig):
+        return dataclasses.asdict(host)
+    return host
+
+
+def _spec_key(spec) -> dict | None:
+    """WorkloadSpec (or its kwargs dict) -> JSON-able cache-key form."""
+    if spec is None:
+        return None
+    if isinstance(spec, WorkloadSpec):
+        spec = dataclasses.asdict(spec)
+    return {k: (list(v) if isinstance(v, tuple) else v)
+            for k, v in spec.items()}
+
+
 def _point_table(pt: dict, p: dict):
     """Synthesize one point's MessageTable: a Poisson workload point
-    (``workload`` + ``load``) or a structured scenario (``scenario`` =
-    {"kind": "incast" | "hotspot" | "shuffle", ...kwargs})."""
+    (``workload`` + ``load``), a structured scenario (``scenario`` =
+    {"kind": "incast" | "hotspot" | "shuffle", ...kwargs}), or a full
+    ``spec`` (:class:`WorkloadSpec` instance or its kwargs dict) —
+    the unified form the other two reduce to."""
+    sp = pt.get("spec")
+    if sp is not None:
+        if any(k in pt for k in ("workload", "load", "scenario")):
+            raise ValueError(
+                "a sweep point combines 'spec' with 'workload'/'load'/"
+                "'scenario'; a WorkloadSpec already carries the whole "
+                "generation recipe — pass exactly one form")
+        if not isinstance(sp, WorkloadSpec):
+            sp = WorkloadSpec(**sp)
+        if "seed" in pt:
+            sp = sp.with_seed(pt["seed"])
+        return sp.build(n_hosts=p["n_hosts"], slot_bytes=p["slot_bytes"])
     sc = pt.get("scenario")
     if sc is not None and ("workload" in pt or "load" in pt):
         raise ValueError(
@@ -89,12 +123,18 @@ def _point_table(pt: dict, p: dict):
 
 
 def _point_key(*, workload, protocol, load, seed, overcommit, alloc,
-               unsched_limit_bytes, params,
-               scenario=None) -> tuple[dict, Path]:
+               unsched_limit_bytes, params, scenario=None, spec=None,
+               host=None) -> tuple[dict, Path]:
     keyd = dict(workload=workload, protocol=protocol, load=load, seed=seed,
                 overcommit=overcommit, alloc=alloc, scenario=scenario,
                 ul=(unsched_limit_bytes if not isinstance(
                     unsched_limit_bytes, np.ndarray) else "array"), **params)
+    # optional axes join the key ONLY when set, so every pre-existing
+    # cache file and committed baseline `params` dict keeps its hash
+    if spec is not None:
+        keyd["spec"] = _spec_key(spec)
+    if host is not None:
+        keyd["host"] = _host_key(host)
     h = hashlib.sha1(json.dumps(keyd, sort_keys=True).encode()).hexdigest()[:16]
     return keyd, ART / f"sim_{h}.json"
 
@@ -116,14 +156,16 @@ def sim_run(*, workload: str, protocol: str, load: float, seed: int = 0,
             n_hosts=None, n_messages=None, max_slots=None, ring_cap=None,
             slot_bytes=None, overcommit=None, alloc: dict | None = None,
             unsched_limit_bytes=None, fabric: dict | None = None,
-            cache: bool = True) -> dict:
+            host: dict | str | None = None, cache: bool = True) -> dict:
     """Run (or fetch cached) one simulation; returns JSON-safe summary.
-    ``fabric`` is a JSON-able FabricConfig kwargs dict (cache-key form)."""
+    ``fabric`` is a JSON-able FabricConfig kwargs dict (cache-key form);
+    ``host`` a preset name or HostConfig kwargs dict (DESIGN.md §10)."""
     p = _merge_params(n_hosts, n_messages, max_slots, ring_cap, slot_bytes,
                       fabric)
     keyd, fp = _point_key(workload=workload, protocol=protocol, load=load,
                           seed=seed, overcommit=overcommit, alloc=alloc,
-                          unsched_limit_bytes=unsched_limit_bytes, params=p)
+                          unsched_limit_bytes=unsched_limit_bytes, params=p,
+                          host=host)
     if cache and fp.exists():
         return json.loads(fp.read_text())
 
@@ -133,6 +175,7 @@ def sim_run(*, workload: str, protocol: str, load: float, seed: int = 0,
     cfg = SimConfig(n_hosts=p["n_hosts"], slot_bytes=p["slot_bytes"],
                     protocol=protocol, overcommit=overcommit,
                     ring_cap=p["ring_cap"], fabric=_fabric_cfg(fabric),
+                    host=host,
                     max_slots=min(p["max_slots"],
                                   int(tbl.arrival_slot.max()) + 20_000))
     res = simulate(cfg, tbl, alloc=_alloc_from_dict(alloc),
@@ -145,12 +188,14 @@ def sim_run(*, workload: str, protocol: str, load: float, seed: int = 0,
 def sim_sweep(points: list[dict], *, protocol: str, overcommit=None,
               n_hosts=None, n_messages=None, max_slots=None, ring_cap=None,
               slot_bytes=None, fabric: dict | None = None,
+              host: dict | str | None = None,
               cache: bool = True) -> list[dict]:
     """Cached batched runner: each point is a dict with ``workload`` and
-    ``load`` (or a ``scenario`` spec, see :func:`_point_table`) plus
-    optional ``seed`` / ``alloc`` / ``unsched_limit_bytes``. All points
-    share the protocol/topology config — including the optional
-    leaf-spine ``fabric`` spec (a FabricConfig kwargs dict); uncached
+    ``load`` (or a ``scenario``/``spec`` form, see :func:`_point_table`)
+    plus optional ``seed`` / ``alloc`` / ``unsched_limit_bytes``. All
+    points share the protocol/topology config — including the optional
+    leaf-spine ``fabric`` spec (a FabricConfig kwargs dict) and ``host``
+    model (preset name or HostConfig kwargs dict); uncached
     points run through ``run_sweep(cfg, SweepSpec(...))``, which groups
     runs by their static scan parameters internally (one jit trace per
     group — scenario sweeps legitimately vary the message count).
@@ -168,7 +213,8 @@ def sim_sweep(points: list[dict], *, protocol: str, overcommit=None,
                        load=pt.get("load"), seed=pt.get("seed", 0),
                        overcommit=overcommit, alloc=pt.get("alloc"),
                        unsched_limit_bytes=pt.get("unsched_limit_bytes"),
-                       scenario=pt.get("scenario"), params=p)
+                       scenario=pt.get("scenario"), spec=pt.get("spec"),
+                       host=host, params=p)
             for pt in points]
     out: list[dict | None] = [None] * len(points)
     todo = []
@@ -184,7 +230,7 @@ def sim_sweep(points: list[dict], *, protocol: str, overcommit=None,
         cfg = SimConfig(n_hosts=p["n_hosts"], slot_bytes=p["slot_bytes"],
                         protocol=protocol, overcommit=overcommit,
                         ring_cap=p["ring_cap"], fabric=_fabric_cfg(fabric),
-                        max_slots=ms)
+                        host=host, max_slots=ms)
         # mixed table lengths are fine: run_sweep groups runs by their
         # static scan parameters internally (core/sweep.group_runs — the
         # same grouping this function used to reimplement)

@@ -24,6 +24,7 @@ def main() -> None:
     from benchmarks import collective_sched as C
     from benchmarks import fabric_figs as FF
     from benchmarks import faults_figs as FL
+    from benchmarks import hostmodel_figs as HM
     from benchmarks import telemetry_figs as TF
     from benchmarks.roofline import backend_compare
     from benchmarks.sweep_speed import sweep_speed
@@ -36,6 +37,8 @@ def main() -> None:
         "fig14_fabric_incast": FF.fig14_fabric_incast,
         "faults_smoke": FL.faults_smoke,
         "fig_faults": FL.fig_faults,
+        "hostmodel_smoke": HM.hostmodel_smoke,
+        "fig_hostmodel": HM.fig_hostmodel,
         "trace_smoke": TF.trace_smoke,
         "fig13_prio_usage_time": TF.fig13_prio_usage_time,
         "fig10_incast": F.fig10_incast,

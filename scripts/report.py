@@ -151,6 +151,26 @@ def paper_validation():
                          f" (lost={by['homa', 'linkfail', rt, 0.0]['fault_lost']})"
                          for rt in ("ecmp", "flowlet", "adaptive")
                          if ("homa", "linkfail", rt, 0.0) in by)))
+    hm = j("fig_hostmodel.json")
+    if hm:
+        by = {(r["workload"], r["host"]): r for r in hm}
+        wls = sorted({r["workload"] for r in hm})
+        rows.append(("Host model: p50 slowdown gap vs ideal host "
+                     "(kernel_bypass / kernel_stack)",
+                     "sim-vs-implementation gap is a host artifact, "
+                     "monotone in per-packet cost (§5.3)",
+                     "; ".join(
+                         f"{w}: {by[w, 'kernel_bypass']['gap_p50']}x / "
+                         f"{by[w, 'kernel_stack']['gap_p50']}x"
+                         for w in wls
+                         if (w, "kernel_stack") in by)))
+        rows.append(("Host model: kernel-stack TX busy / RX backlog",
+                     "host, not fabric, is the bottleneck at high load",
+                     "; ".join(
+                         f"{w}: busy={by[w, 'kernel_stack']['tx_busy']}, "
+                         f"rxq_max={by[w, 'kernel_stack']['rx_q_max']}"
+                         for w in wls
+                         if (w, "kernel_stack") in by)))
     ts = j("trace_smoke.json")
     if ts:
         r = ts[0]

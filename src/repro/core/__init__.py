@@ -2,25 +2,28 @@
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
 from repro.core.sim import (SimConfig, SimResult, simulate, run_sweep,
-                            run_sim, slowdown_percentiles)
+                            slowdown_percentiles)
 from repro.core.sweep import SweepSpec, StreamSpec, SweepStats
 from repro.core.fabric import FabricConfig
 from repro.core.faults import FaultConfig
+from repro.core.hostmodel import (HostConfig, HostModel, host_preset,
+                                  register_host_model)
 from repro.core.telemetry import TraceConfig, SimTrace
 from repro.core.protocols import (Protocol, SenderPolicy, ReceiverPolicy,
                                   register, get_protocol,
                                   registered_protocols)
-from repro.core.workloads import MessageTable, make_messages
+from repro.core.workloads import MessageTable, WorkloadSpec, make_messages
 from repro.core import scenarios
 from repro.core.priorities import PriorityAllocation, allocate_priorities
 
 __all__ = [
     "SimConfig", "SimResult", "FabricConfig", "FaultConfig", "TraceConfig",
-    "SimTrace", "simulate",
+    "SimTrace", "HostConfig", "HostModel", "host_preset",
+    "register_host_model", "simulate",
     "run_sweep", "SweepSpec", "StreamSpec", "SweepStats",
-    "run_sim", "slowdown_percentiles",
+    "slowdown_percentiles",
     "Protocol", "SenderPolicy", "ReceiverPolicy", "register",
     "get_protocol", "registered_protocols",
-    "MessageTable", "make_messages", "scenarios",
+    "MessageTable", "WorkloadSpec", "make_messages", "scenarios",
     "PriorityAllocation", "allocate_priorities",
 ]

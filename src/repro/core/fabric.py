@@ -129,6 +129,47 @@ class FabricConfig:
     def n_uplinks_total(self, n_hosts: int) -> int:
         return self.racks * self.n_uplinks(n_hosts)
 
+    # ---- failure-scenario constructors (DESIGN.md §7). Each returns a
+    # new frozen config with the fault layered onto any existing
+    # FaultConfig; re-exported as module functions from
+    # repro.core.scenarios for compatibility.
+
+    def with_faults(self, **fault_kw) -> "FabricConfig":
+        """New config with ``fault_kw`` merged into the fault layer."""
+        if not self.enabled:
+            raise ValueError("failure scenarios need an enabled fabric "
+                             "(FabricConfig with racks set): faults model "
+                             "loss on leaf-spine links")
+        base = dataclasses.asdict(self.faults) \
+            if self.faults is not None else {}
+        return dataclasses.replace(
+            self, faults=FaultConfig(**{**base, **fault_kw}))
+
+    def with_lossy(self, *, up_loss: float = 0.0, down_loss: float = 0.0,
+                   ge_p_gb: float = 0.0, ge_p_bg: float = 0.05,
+                   ge_loss: float = 0.5, seed: int = 0) -> "FabricConfig":
+        """Steady-state lossy links: Bernoulli uplink/downlink chunk
+        loss, optionally with a Gilbert-Elliott burst component."""
+        return self.with_faults(up_loss=up_loss, down_loss=down_loss,
+                                ge_p_gb=ge_p_gb, ge_p_bg=ge_p_bg,
+                                ge_loss=ge_loss, seed=seed)
+
+    def with_uplink_failure(self, *, uplink: int, start: int,
+                            end: int) -> "FabricConfig":
+        """One TOR uplink black-holes all traffic for ``[start, end)``
+        slots — the scenario where routing policy dominates: static ECMP
+        keeps hashing flows into the dead spine until the window lifts."""
+        prior = self.faults.link_fail if self.faults is not None else ()
+        return self.with_faults(link_fail=prior + ((uplink, start, end),))
+
+    def with_tor_failure(self, *, rack: int, start: int,
+                         end: int) -> "FabricConfig":
+        """A whole TOR fails for ``[start, end)`` slots: the rack's
+        uplinks and host downlinks all go dark; recovery timeouts must
+        carry every in-flight message across the window."""
+        prior = self.faults.tor_fail if self.faults is not None else ()
+        return self.with_faults(tor_fail=prior + ((rack, start, end),))
+
 
 def spine_hash(src: np.ndarray, dst: np.ndarray, msg_id: np.ndarray,
                seed: int, n_uplinks: int) -> np.ndarray:

@@ -1,0 +1,315 @@
+"""Pluggable host/NIC stage: per-packet software overhead (DESIGN.md §10).
+
+Homa's §5.3 reports a large gap between implementation and simulation
+latency, and Ousterhout's *It's Time to Replace TCP in the Datacenter*
+argues the dominant cost for Homa-class transports is per-packet host
+software processing — a cost a fabric-only simulator models as zero.
+This module adds that cost as a swappable stage (SimBricks-style: host,
+NIC, and network compose behind enforced interfaces) in front of the
+existing network model, on both sides of the wire:
+
+  send side     a per-host TX token bucket in fixed-point "micro-slots"
+                (1/256 slot): every transmitted chunk charges
+                ``tx_cost_slots`` of CPU time, every ``tx_batch``-th
+                chunk additionally pays ``tx_batch_cost_slots``
+                (interrupt coalescing / doorbell batching), and budget
+                accrues while idle up to ``tx_queue_cap`` chunks' worth
+                (NIC TX ring pre-fill), so bursts go out at line rate
+                but the *sustained* rate is 1/cost chunks per slot.
+  receive side  a per-host bounded FIFO (NIC RX ring): each chunk
+                drained off the downlink enters the ring and becomes
+                visible to the receiver (``recv`` — which clocks both
+                grants and completion) only after ``rx_cost_slots`` of
+                serialized CPU service; a full ring backpressures the
+                downlink (the chunk stays queued in the network).
+
+Everything is int32 fixed-point: ``prepare`` bounds ``max_slots``
+below 2**21, so absolute micro-slot timestamps stay under 2**29.
+
+Zero-overhead configs are structurally skipped: ``SimConfig.host=None``
+and the ``ideal`` preset (all costs zero) add no arrays and no ops to
+the scan, so the compiled program — and therefore every golden — is
+bit-identical to the host-free simulator. A side whose costs are all
+zero (``tx_on`` / ``rx_on`` False) vanishes the same way; note an
+*active* RX stage adds at least one slot of latency per chunk even at
+small costs, because ring entries become ready strictly after their
+enqueue slot.
+
+Host models are pluggable through an enforced interface: implement
+:class:`HostModel`'s five hooks and :func:`register_host_model` it;
+``HostConfig.model`` selects the implementation by name. ``"cpu"``
+(:class:`CpuHostModel`, the token-bucket + RX-ring model above) ships
+in-tree, with presets:
+
+  ideal          zero overhead — the host stage compiles away
+  kernel_stack   OS kernel networking: ~1 slot/chunk marginal TX cost
+                 + an 8-slot interrupt batch every 8 chunks (effective
+                 2 slots/chunk ≈ 0.5 line rate), 2 slots RX service
+  kernel_bypass  DPDK-style polling: 0.25 slots TX, 0.5 slots RX —
+                 line rate sustained, small added latency
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core.protocols import I32
+
+# fixed-point scale: micro-slots per link slot (8 fractional bits)
+QSCALE = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class HostConfig:
+    """Host/NIC stage parameters (frozen, hashable -> jit-static).
+
+    Costs are in link-slot units (1 slot = ``slot_bytes`` of wire time,
+    default 256 B ≈ 205 ns at 10 Gbps) and quantized to 1/256 slot.
+    """
+    model: str = "cpu"              # registered HostModel implementation
+    tx_cost_slots: float = 0.0      # CPU time per transmitted chunk
+    tx_batch: int = 1               # chunks per interrupt/doorbell batch
+    tx_batch_cost_slots: float = 0.0  # extra cost on each batch boundary
+    tx_queue_cap: int = 1           # TX ring depth: idle budget accrual (chunks)
+    rx_cost_slots: float = 0.0      # serialized CPU time per received chunk
+    rx_queue_cap: int = 64          # RX ring depth; full -> downlink stalls
+
+    def validate(self) -> None:
+        get_host_model(self.model)          # ValueError on unknown model
+        for f in ("tx_cost_slots", "tx_batch_cost_slots", "rx_cost_slots"):
+            v = getattr(self, f)
+            if not 0.0 <= float(v) <= 4096.0:
+                raise ValueError(f"HostConfig.{f}={v!r} must be in "
+                                 f"[0, 4096] slots")
+        for f in ("tx_batch", "tx_queue_cap", "rx_queue_cap"):
+            v = getattr(self, f)
+            if not isinstance(v, int) or v < 1:
+                raise ValueError(f"HostConfig.{f}={v!r} must be an int >= 1")
+
+    # -- fixed-point views ------------------------------------------------
+    @property
+    def tx_cost_q(self) -> int:
+        return int(round(self.tx_cost_slots * QSCALE))
+
+    @property
+    def tx_batch_cost_q(self) -> int:
+        return int(round(self.tx_batch_cost_slots * QSCALE))
+
+    @property
+    def rx_cost_q(self) -> int:
+        return int(round(self.rx_cost_slots * QSCALE))
+
+    @property
+    def tx_burst_q(self) -> int:
+        """Token-bucket cap: ``tx_queue_cap`` chunks' worth of budget
+        (never below the worst single-chunk charge, so no config can
+        deadlock the gate)."""
+        return max(self.tx_queue_cap * max(self.tx_cost_q, QSCALE),
+                   self.tx_cost_q + self.tx_batch_cost_q)
+
+    # -- structural gates (python-level -> compiled program identity) -----
+    @property
+    def tx_on(self) -> bool:
+        return self.tx_cost_q > 0 or self.tx_batch_cost_q > 0
+
+    @property
+    def rx_on(self) -> bool:
+        return self.rx_cost_q > 0
+
+    @property
+    def is_ideal(self) -> bool:
+        """All costs zero: the host stage is structurally skipped and the
+        scan is bit-identical to ``host=None`` (enforced by test)."""
+        return not (self.tx_on or self.rx_on)
+
+
+class HostModel(abc.ABC):
+    """Enforced interface for a host/NIC stage implementation.
+
+    ``step_fn`` talks to the host model only through these five hooks
+    (the SimBricks seam: a later co-simulation backend swaps the class,
+    not the scan). All hooks are pure: state in, state out; arrays only
+    — they run inside ``lax.scan`` under jit/vmap/shard_map.
+    """
+    name: str = "base"
+
+    @abc.abstractmethod
+    def init_state(self, cfg, M: int) -> dict:
+        """Per-run carry arrays (prefix ``h_``), keyed off ``cfg.host``."""
+
+    @abc.abstractmethod
+    def host_tx(self, cfg, st, want, now):
+        """Gate this slot's transmissions on TX CPU availability.
+
+        ``want``: (H,) bool — hosts with a sendable chunk selected.
+        Returns ``(sent, st)``: the gated (H,) mask of hosts that may
+        put their chunk on the wire this slot, and updated state
+        (budget spent, deferral stats)."""
+
+    @abc.abstractmethod
+    def rx_deliver(self, cfg, st, S, now) -> dict:
+        """Complete RX processing: move every ring entry whose service
+        finished by ``now`` into ``st['recv']`` (at most one per host
+        per slot — arrivals are at most one per host per slot, so the
+        FIFO is work-conserving)."""
+
+    @abc.abstractmethod
+    def rx_room(self, cfg, st):
+        """(H,) bool: hosts whose RX ring can accept a chunk this slot;
+        False backpressures the downlink (the chunk stays queued)."""
+
+    @abc.abstractmethod
+    def rx_accept(self, cfg, st, S, msg, ok, now) -> dict:
+        """Enqueue this slot's drained chunk (per host, masked by
+        ``ok``) into the RX ring with its service-completion time."""
+
+
+_HOST_MODELS: dict[str, HostModel] = {}
+
+
+def register_host_model(model: HostModel) -> HostModel:
+    """Register a :class:`HostModel` instance under ``model.name``.
+
+    The abc machinery enforces the interface: a subclass missing any
+    hook cannot even be instantiated."""
+    if not isinstance(model, HostModel):
+        raise TypeError(f"register_host_model expects a HostModel "
+                        f"instance, got {type(model).__name__}")
+    _HOST_MODELS[model.name] = model
+    return model
+
+
+def get_host_model(name: str) -> HostModel:
+    try:
+        return _HOST_MODELS[name]
+    except KeyError:
+        raise ValueError(f"unknown host model {name!r}; registered: "
+                         f"{sorted(_HOST_MODELS)}") from None
+
+
+class CpuHostModel(HostModel):
+    """TX token bucket + bounded RX service FIFO (module docstring)."""
+    name = "cpu"
+
+    def init_state(self, cfg, M: int) -> dict:
+        hc = cfg.host
+        H = cfg.n_hosts
+        st = {}
+        if hc.tx_on:
+            st.update({
+                # bucket starts full: a cold host bursts its TX ring depth
+                "h_tx_budget_q": jnp.full((H,), hc.tx_burst_q, I32),
+                "h_tx_work_q": jnp.zeros((H,), I32),   # spent CPU micro-slots
+                "h_tx_defer": jnp.zeros((H,), I32),    # slots gated w/ traffic
+            })
+            if hc.tx_batch > 1:
+                st["h_tx_cnt"] = jnp.zeros((H,), I32)  # chunks into batch
+        if hc.rx_on:
+            cap = hc.rx_queue_cap
+            st.update({
+                "h_rx_msg": jnp.full((H, cap), -1, I32),
+                "h_rx_ready_q": jnp.zeros((H, cap), I32),  # abs micro-slots
+                "h_rx_head": jnp.zeros((H,), I32),
+                "h_rx_tail": jnp.zeros((H,), I32),
+                "h_rx_busy_q": jnp.zeros((H,), I32),   # CPU busy-until
+                "h_rx_stall": jnp.zeros((H,), I32),    # slots downlink blocked
+                "h_rx_q_sum": jnp.zeros((H,), jnp.float32),
+                "h_rx_q_max": jnp.zeros((H,), I32),
+            })
+        return st
+
+    def host_tx(self, cfg, st, want, now):
+        hc = cfg.host
+        budget = jnp.minimum(st["h_tx_budget_q"] + QSCALE, hc.tx_burst_q)
+        charge = jnp.full_like(budget, hc.tx_cost_q)
+        if hc.tx_batch > 1:
+            boundary = st["h_tx_cnt"] + 1 >= hc.tx_batch
+            charge = charge + jnp.where(boundary, hc.tx_batch_cost_q, 0)
+        else:
+            charge = charge + hc.tx_batch_cost_q
+        ok = budget >= charge
+        sent = want & ok
+        spend = jnp.where(sent, charge, 0)
+        st = {**st, "h_tx_budget_q": budget - spend,
+              "h_tx_work_q": st["h_tx_work_q"] + spend,
+              "h_tx_defer": st["h_tx_defer"] + (want & ~ok).astype(I32)}
+        if hc.tx_batch > 1:
+            st["h_tx_cnt"] = jnp.where(
+                sent, jnp.where(boundary, 0, st["h_tx_cnt"] + 1),
+                st["h_tx_cnt"])
+        return sent, st
+
+    def rx_deliver(self, cfg, st, S, now):
+        hc = cfg.host
+        H, cap = cfg.n_hosts, hc.rx_queue_cap
+        M = S["size"].shape[0]
+        head, tail = st["h_rx_head"], st["h_rx_tail"]
+        occ = tail - head
+        hh = jnp.arange(H)
+        hpos = head % cap
+        can = (occ > 0) & (st["h_rx_ready_q"][hh, hpos] <= now * QSCALE)
+        msg = st["h_rx_msg"][hh, hpos]
+        recv = st["recv"].at[jnp.where(can, msg, M)].add(
+            jnp.where(can, 1, 0), mode="drop")
+        return {**st, "recv": recv, "h_rx_head": head + can.astype(I32),
+                "h_rx_q_sum": st["h_rx_q_sum"] + occ.astype(jnp.float32),
+                "h_rx_q_max": jnp.maximum(st["h_rx_q_max"], occ)}
+
+    def rx_room(self, cfg, st):
+        return (st["h_rx_tail"] - st["h_rx_head"]) < cfg.host.rx_queue_cap
+
+    def rx_accept(self, cfg, st, S, msg, ok, now):
+        hc = cfg.host
+        cap = hc.rx_queue_cap
+        hh = jnp.arange(cfg.n_hosts)
+        tail = st["h_rx_tail"]
+        # serialized service: this chunk is processed after everything
+        # already in the ring, never before its own arrival slot ends
+        ready = jnp.maximum(st["h_rx_busy_q"], now * QSCALE) + hc.rx_cost_q
+        col = jnp.where(ok, tail % cap, cap)                 # cap -> dropped
+        return {**st,
+                "h_rx_msg": st["h_rx_msg"].at[hh, col].set(msg, mode="drop"),
+                "h_rx_ready_q": st["h_rx_ready_q"].at[hh, col].set(
+                    ready, mode="drop"),
+                "h_rx_tail": tail + ok.astype(I32),
+                "h_rx_busy_q": jnp.where(ok, ready, st["h_rx_busy_q"])}
+
+
+register_host_model(CpuHostModel())
+
+
+HOST_PRESETS: dict[str, HostConfig] = {
+    "ideal": HostConfig(),
+    "kernel_stack": HostConfig(tx_cost_slots=1.0, tx_batch=8,
+                               tx_batch_cost_slots=8.0, tx_queue_cap=16,
+                               rx_cost_slots=2.0, rx_queue_cap=256),
+    "kernel_bypass": HostConfig(tx_cost_slots=0.25, tx_queue_cap=32,
+                                rx_cost_slots=0.5, rx_queue_cap=64),
+}
+
+
+def host_preset(name: str) -> HostConfig:
+    try:
+        return HOST_PRESETS[name]
+    except KeyError:
+        raise ValueError(f"unknown host preset {name!r}; available: "
+                         f"{sorted(HOST_PRESETS)}") from None
+
+
+def as_host_config(host) -> HostConfig | None:
+    """Normalize ``SimConfig.host``: HostConfig | preset name | dict | None."""
+    if host is None or isinstance(host, HostConfig):
+        return host
+    if isinstance(host, str):
+        return host_preset(host)
+    if isinstance(host, dict):
+        return HostConfig(**host)
+    raise TypeError(f"SimConfig.host must be a HostConfig, preset name, "
+                    f"dict, or None — got {type(host).__name__}")
+
+
+__all__ = ["HostConfig", "HostModel", "CpuHostModel", "HOST_PRESETS",
+           "host_preset", "as_host_config", "register_host_model",
+           "get_host_model", "QSCALE"]

@@ -1,7 +1,7 @@
 """Structured simulation results.
 
-``run_sim`` historically returned a raw dict; :class:`SimResult` makes the
-quantities every consumer recomputed by hand — slowdown percentiles,
+The simulator historically returned a raw dict; :class:`SimResult` makes
+the quantities every consumer recomputed by hand — slowdown percentiles,
 utilization, queue stats, priority usage — first-class fields and methods,
 with :meth:`SimResult.to_json` providing the JSON-safe summary the
 benchmark cache stores.
@@ -103,6 +103,14 @@ class SimResult:
     msg_lost_chunks: np.ndarray | None = None  # (M,) fault-dropped chunks
     recovery_slots: np.ndarray | None = None   # (M,) first loss -> done; -1
     fault_lost_chunks: int = 0       # total chunks dropped by fault injection
+    # host/NIC software-overhead stage (None when SimConfig.host was off
+    # or ideal — repro.core.hostmodel, DESIGN.md §10); per-host (H,)
+    host: dict | None = None         # HostConfig echo (model, costs, caps)
+    host_tx_busy_frac: np.ndarray | None = None   # TX CPU time / horizon
+    host_tx_defer_frac: np.ndarray | None = None  # slots gated w/ traffic
+    host_rx_stall_frac: np.ndarray | None = None  # slots downlink stalled
+    host_rx_q_mean_chunks: np.ndarray | None = None  # RX ring backlog
+    host_rx_q_max_chunks: np.ndarray | None = None
     # telemetry capture (None when SimConfig.trace was off, DESIGN.md §8):
     # trace is the full SimTrace (simulate only — run_sweep keeps just
     # trace_summary, the reduced streaming-stat dict)
@@ -171,6 +179,20 @@ class SimResult:
                 "recovery_p99_slots": float(np.percentile(rec[hit], 99))
                 if hit.any() else None,
             }
+        host = None
+        if self.host is not None:
+            host = dict(self.host)
+            if self.host_tx_busy_frac is not None:
+                host["tx_busy_frac"] = float(np.mean(self.host_tx_busy_frac))
+                host["tx_defer_frac"] = float(
+                    np.mean(self.host_tx_defer_frac))
+            if self.host_rx_stall_frac is not None:
+                host["rx_stall_frac"] = float(
+                    np.mean(self.host_rx_stall_frac))
+                host["rx_q_mean_chunks"] = float(
+                    np.mean(self.host_rx_q_mean_chunks))
+                host["rx_q_max_chunks"] = int(
+                    np.max(self.host_rx_q_max_chunks))
         return {
             "protocol": self.protocol,
             "n_complete": int(self.n_complete),
@@ -193,6 +215,7 @@ class SimResult:
             "p50_all": self.percentile(50, ok),
             "fabric": fabric,
             "faults": faults,
+            "host": host,
             "trace": self.trace_summary,
         }
 
@@ -211,6 +234,10 @@ class SimResult:
         "tor_up_q_max_bytes": np.int64,
         "retx_chunks": np.int64, "msg_lost_chunks": np.int64,
         "recovery_slots": np.int64,
+        "host_tx_busy_frac": np.float64, "host_tx_defer_frac": np.float64,
+        "host_rx_stall_frac": np.float64,
+        "host_rx_q_mean_chunks": np.float64,
+        "host_rx_q_max_chunks": np.int64,
     }
     _SKIP_FIELDS = ("state", "static", "trace")   # not JSON-serialized
 
@@ -255,23 +282,3 @@ class SimResult:
                 d[name] = np.asarray(d[name], dtype=dt)
         known = {f.name for f in dataclasses.fields(cls)}
         return cls(**{k: v for k, v in d.items() if k in known})
-
-    def to_legacy_dict(self) -> dict:
-        """The exact dict schema returned by the original ``run_sim``."""
-        out = {
-            "alloc": self.alloc,
-            "completion": self.completion, "elapsed": self.elapsed,
-            "ideal": self.ideal, "slowdown": self.slowdown, "done": self.done,
-            "size_slots": self.size_slots, "size_bytes": self.size_bytes,
-            "busy_frac": self.busy_frac, "wasted_frac": self.wasted_frac,
-            "uplink_busy_frac": self.uplink_busy_frac,
-            "q_mean_bytes": self.q_mean_bytes,
-            "q_max_bytes": self.q_max_bytes,
-            "prio_drained_bytes": self.prio_drained_bytes,
-            "lost_chunks": self.lost_chunks,
-            "n_complete": self.n_complete, "n_messages": self.n_messages,
-        }
-        if self.state is not None:
-            out["state"] = self.state
-            out["static"] = self.static
-        return out

@@ -16,24 +16,26 @@ paper's evaluation plus the classic fabric stress patterns:
                fixed-size message (map-reduce shuffle), the canonical
                TOR-uplink oversubscription stressor.
 
-All generators are deterministic in ``seed``.
+All generators are deterministic in ``seed`` and are thin wrappers over
+:class:`repro.core.workloads.WorkloadSpec` — the frozen spec type that
+``SweepSpec`` and ``benchmarks/common.sim_sweep`` accept directly; the
+``_*_impl`` functions here hold the actual generation and are dispatched
+from ``WorkloadSpec.build``.
 
-Failure scenarios (DESIGN.md §7) live on the *fabric* axis instead: the
-``lossy_fabric`` / ``uplink_failure`` / ``tor_failure`` helpers attach a
-:class:`~repro.core.faults.FaultConfig` to an existing
-:class:`~repro.core.fabric.FabricConfig`, so any traffic scenario above
-composes with any failure scenario by pairing a table with a faulted
-fabric.
+Failure scenarios (DESIGN.md §7) live on the *fabric* axis instead:
+``FabricConfig.with_lossy`` / ``.with_uplink_failure`` /
+``.with_tor_failure`` attach a :class:`~repro.core.faults.FaultConfig`
+to an existing :class:`~repro.core.fabric.FabricConfig`, so any traffic
+scenario above composes with any failure scenario by pairing a table
+with a faulted fabric. The original ``lossy_fabric`` / ``uplink_failure``
+/ ``tor_failure`` helpers are re-exported here for compatibility.
 """
 from __future__ import annotations
-
-import dataclasses
 
 import numpy as np
 
 from repro.core.fabric import FabricConfig
-from repro.core.faults import FaultConfig
-from repro.core.workloads import MessageTable, make_messages
+from repro.core.workloads import MessageTable, WorkloadSpec, make_messages
 
 
 def merge_tables(a: MessageTable, b: MessageTable, *, workload: str,
@@ -74,29 +76,41 @@ def incast(fan_in: int, burst_bytes: int, *, n_hosts: int,
     rack partition. With ``background``/``background_load``/
     ``n_background`` set, a Poisson workload table is overlaid.
     """
+    return WorkloadSpec(
+        kind="incast", fan_in=fan_in, burst_bytes=burst_bytes, dst=dst,
+        n_bursts=n_bursts, period_slots=period_slots,
+        first_slot=first_slot, background=background,
+        background_load=background_load, n_background=n_background,
+        seed=seed).build(n_hosts=n_hosts, slot_bytes=slot_bytes)
+
+
+def _incast_impl(ws: WorkloadSpec, n_hosts: int,
+                 slot_bytes: int) -> MessageTable:
+    fan_in, dst, seed = ws.fan_in, ws.dst, ws.seed
     if not 1 <= fan_in <= n_hosts - 1:
         raise ValueError(f"incast fan_in must be in [1, n_hosts-1], got "
                          f"{fan_in} with n_hosts={n_hosts}")
     others = np.array([h for h in range(n_hosts) if h != dst], np.int32)
     rng = np.random.default_rng(seed)
     srcs, arrs = [], []
-    for b in range(n_bursts):
+    for b in range(ws.n_bursts):
         start = int(rng.integers(len(others)))      # rotate the sender set
         sel = others[(start + np.arange(fan_in)) % len(others)]
         srcs.append(sel)
-        arrs.append(np.full(fan_in, first_slot + b * period_slots))
+        arrs.append(np.full(fan_in, ws.first_slot + b * ws.period_slots))
     src = np.concatenate(srcs).astype(np.int32)
     arr = np.concatenate(arrs).astype(np.int32)
     tbl = MessageTable(src, np.full_like(src, dst),
-                       np.full(len(src), burst_bytes, np.int64),
-                       arr, f"incast{fan_in}x{burst_bytes}", 0.0,
+                       np.full(len(src), ws.burst_bytes, np.int64),
+                       arr, f"incast{fan_in}x{ws.burst_bytes}", 0.0,
                        slot_bytes)
-    if n_background and background:
-        bg = make_messages(background, n_hosts=n_hosts,
-                           load=background_load, n_messages=n_background,
+    if ws.n_background and ws.background:
+        bg = make_messages(ws.background, n_hosts=n_hosts,
+                           load=ws.background_load,
+                           n_messages=ws.n_background,
                            slot_bytes=slot_bytes, seed=seed + 1)
-        tbl = merge_tables(bg, tbl, workload=f"incast+{background}",
-                           load=background_load)
+        tbl = merge_tables(bg, tbl, workload=f"incast+{ws.background}",
+                           load=ws.background_load)
     return tbl
 
 
@@ -107,23 +121,31 @@ def hotspot(workload: str, *, n_hosts: int, load: float, n_messages: int,
     are redirected to a hot set of ``n_hot`` hosts (the first ``n_hot``
     host ids), the rest keep their uniform destinations. Sizes and
     arrivals come from the base Poisson workload unchanged."""
-    if not 0.0 <= hot_fraction <= 1.0:
+    return WorkloadSpec(
+        kind="hotspot", workload=workload, load=load,
+        n_messages=n_messages, hot_fraction=hot_fraction, n_hot=n_hot,
+        seed=seed).build(n_hosts=n_hosts, slot_bytes=slot_bytes)
+
+
+def _hotspot_impl(ws: WorkloadSpec, n_hosts: int,
+                  slot_bytes: int) -> MessageTable:
+    if not 0.0 <= ws.hot_fraction <= 1.0:
         raise ValueError(f"hot_fraction must be in [0, 1], got "
-                         f"{hot_fraction}")
-    if not 1 <= n_hot < n_hosts:
-        raise ValueError(f"n_hot must be in [1, n_hosts), got {n_hot}")
-    tbl = make_messages(workload, n_hosts=n_hosts, load=load,
-                        n_messages=n_messages, slot_bytes=slot_bytes,
-                        seed=seed)
-    rng = np.random.default_rng(seed + 0x5EED)
-    redirect = rng.random(n_messages) < hot_fraction
-    hot_dst = rng.integers(0, n_hot, n_messages).astype(np.int32)
+                         f"{ws.hot_fraction}")
+    if not 1 <= ws.n_hot < n_hosts:
+        raise ValueError(f"n_hot must be in [1, n_hosts), got {ws.n_hot}")
+    tbl = make_messages(ws.workload, n_hosts=n_hosts, load=ws.load,
+                        n_messages=ws.n_messages, slot_bytes=slot_bytes,
+                        seed=ws.seed, max_bytes=ws.max_bytes)
+    rng = np.random.default_rng(ws.seed + 0x5EED)
+    redirect = rng.random(ws.n_messages) < ws.hot_fraction
+    hot_dst = rng.integers(0, ws.n_hot, ws.n_messages).astype(np.int32)
     dst = np.where(redirect, hot_dst, tbl.dst).astype(np.int32)
     # a hot host never sends to itself: bounce to the next host id
     clash = dst == tbl.src
     dst[clash] = (dst[clash] + 1) % n_hosts
     return MessageTable(tbl.src, dst, tbl.size, tbl.arrival_slot,
-                        f"hotspot:{workload}", load, slot_bytes)
+                        f"hotspot:{ws.workload}", ws.load, slot_bytes)
 
 
 def shuffle(*, n_hosts: int, bytes_per_pair: int, slot_bytes: int = 256,
@@ -133,59 +155,45 @@ def shuffle(*, n_hosts: int, bytes_per_pair: int, slot_bytes: int = 256,
     ``spread_slots`` (0 = everything starts at slot 0) in a seeded
     random pair order — the map-reduce shuffle that saturates
     oversubscribed TOR uplinks."""
+    return WorkloadSpec(
+        kind="shuffle", bytes_per_pair=bytes_per_pair,
+        spread_slots=spread_slots, seed=seed).build(
+            n_hosts=n_hosts, slot_bytes=slot_bytes)
+
+
+def _shuffle_impl(ws: WorkloadSpec, n_hosts: int,
+                  slot_bytes: int) -> MessageTable:
     pairs = np.array([(i, j) for i in range(n_hosts)
                       for j in range(n_hosts) if i != j], np.int32)
-    rng = np.random.default_rng(seed)
+    rng = np.random.default_rng(ws.seed)
     order = rng.permutation(len(pairs))
     pairs = pairs[order]
-    if spread_slots > 0:
-        arr = np.sort(rng.integers(0, spread_slots, len(pairs)))
+    if ws.spread_slots > 0:
+        arr = np.sort(rng.integers(0, ws.spread_slots, len(pairs)))
     else:
         arr = np.zeros(len(pairs), np.int64)
     return MessageTable(pairs[:, 0], pairs[:, 1],
-                        np.full(len(pairs), bytes_per_pair, np.int64),
+                        np.full(len(pairs), ws.bytes_per_pair, np.int64),
                         arr.astype(np.int32), "shuffle", 1.0, slot_bytes)
 
 
 # ------------------------------------------------- failure scenarios ------
+# Compatibility wrappers: failure scenarios are FabricConfig.with_*
+# methods now (they transform the fabric, so they live on it).
 
-def _with_faults(fab: FabricConfig, **fault_kw) -> FabricConfig:
-    if not fab.enabled:
-        raise ValueError("failure scenarios need an enabled fabric "
-                         "(FabricConfig with racks set): faults model "
-                         "loss on leaf-spine links")
-    base = dataclasses.asdict(fab.faults) if fab.faults is not None else {}
-    return dataclasses.replace(fab, faults=FaultConfig(**{**base,
-                                                          **fault_kw}))
+def lossy_fabric(fab: FabricConfig, **kw) -> FabricConfig:
+    """Thin wrapper over :meth:`FabricConfig.with_lossy`."""
+    return fab.with_lossy(**kw)
 
 
-def lossy_fabric(fab: FabricConfig, *, up_loss: float = 0.0,
-                 down_loss: float = 0.0, ge_p_gb: float = 0.0,
-                 ge_p_bg: float = 0.05, ge_loss: float = 0.5,
-                 seed: int = 0) -> FabricConfig:
-    """Steady-state lossy links: Bernoulli uplink/downlink chunk loss,
-    optionally with a Gilbert-Elliott burst component."""
-    return _with_faults(fab, up_loss=up_loss, down_loss=down_loss,
-                        ge_p_gb=ge_p_gb, ge_p_bg=ge_p_bg, ge_loss=ge_loss,
-                        seed=seed)
+def uplink_failure(fab: FabricConfig, **kw) -> FabricConfig:
+    """Thin wrapper over :meth:`FabricConfig.with_uplink_failure`."""
+    return fab.with_uplink_failure(**kw)
 
 
-def uplink_failure(fab: FabricConfig, *, uplink: int, start: int,
-                   end: int) -> FabricConfig:
-    """One TOR uplink black-holes all traffic for ``[start, end)`` slots
-    — the scenario where routing policy dominates: static ECMP keeps
-    hashing flows into the dead spine until the window lifts."""
-    prior = fab.faults.link_fail if fab.faults is not None else ()
-    return _with_faults(fab, link_fail=prior + ((uplink, start, end),))
-
-
-def tor_failure(fab: FabricConfig, *, rack: int, start: int,
-                end: int) -> FabricConfig:
-    """A whole TOR fails for ``[start, end)`` slots: the rack's uplinks
-    and host downlinks all go dark; recovery timeouts must carry every
-    in-flight message across the window."""
-    prior = fab.faults.tor_fail if fab.faults is not None else ()
-    return _with_faults(fab, tor_fail=prior + ((rack, start, end),))
+def tor_failure(fab: FabricConfig, **kw) -> FabricConfig:
+    """Thin wrapper over :meth:`FabricConfig.with_tor_failure`."""
+    return fab.with_tor_failure(**kw)
 
 
 __all__ = ["incast", "hotspot", "shuffle", "merge_tables",

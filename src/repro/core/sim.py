@@ -5,7 +5,10 @@ protocols, as one ``lax.scan`` over link-time slots:
 
   senders     chunk order + priority stamping from the protocol's
               ``SenderPolicy`` (SRPT for Homa), blind until RTTbytes,
-              then grant-clocked
+              then grant-clocked; optionally gated by a host/NIC
+              stage modeling per-chunk CPU cost and interrupt
+              batching (``SimConfig.host``, ``repro.core.hostmodel``,
+              DESIGN.md §10)
   network     fixed delay (single switch, the default), or a two-tier
               leaf-spine fabric with per-TOR uplink priority queues and
               configurable oversubscription (``SimConfig.fabric``,
@@ -16,7 +19,10 @@ protocols, as one ``lax.scan`` over link-time slots:
               from the protocol's ``ReceiverPolicy`` (Homa: top-K SRPT with
               controlled overcommitment, dynamic scheduled priorities
               lowest-levels-first, §3.4/Fig. 5), delayed visibility at
-              senders (grant RTT)
+              senders (grant RTT); with a host model, drained chunks
+              pass through a bounded per-host RX service FIFO before
+              they reach ``recv`` — so software overhead delays grants
+              AND completions (the §5.3 implementation-vs-sim gap)
 
 Time unit: one slot = ``slot_bytes`` of link time (default 256 B ~ 205 ns at
 10 Gbps; rtt_slots=38 -> RTTbytes ~ 9.7 KB as in the paper). All sizes are
@@ -42,13 +48,11 @@ Entry points:
                               per static-parameter group, optionally
                               device-sharded (``shard_map``) with chunked
                               scans + streaming stats (DESIGN.md §9)
-  ``run_sim(cfg, table)``     deprecated dict-returning shim
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -66,6 +70,7 @@ from repro.core.fabric import (FabricConfig, spine_hash, ring_insert,
                                route_chunks, uplink_drain)
 from repro.core.faults import (FaultConfig, init_fault_state,
                                apply_recovery, host_down_mask)
+from repro.core.hostmodel import HostConfig, as_host_config, get_host_model
 from repro.core import telemetry
 from repro.core.telemetry import TraceConfig, SimTrace
 from repro.core.results import SimResult, bucketed_percentiles
@@ -87,6 +92,11 @@ class SimConfig:
     phost_timeout_slots: int = 114      # ~3 RTT
     max_slots: int = 20_000
     fabric: FabricConfig | None = None  # None: single switch (DESIGN.md §5)
+    # host/NIC software-overhead stage (repro.core.hostmodel,
+    # DESIGN.md §10): HostConfig | preset name ("ideal" | "kernel_stack"
+    # | "kernel_bypass") | dict | None. None and zero-cost configs are
+    # structurally skipped — bit-identical to the host-free simulator.
+    host: HostConfig | str | dict | None = None
     # in-scan telemetry capture (repro.core.telemetry, DESIGN.md §8);
     # None (the default) keeps the scan free of every trace array and op
     # — bit-identical to the pre-telemetry simulator
@@ -107,6 +117,9 @@ class SimConfig:
                            resolve_interpret(self.pallas_interpret))
         if self.fabric is not None:
             self.fabric.validate(self.n_hosts)
+        object.__setattr__(self, "host", as_host_config(self.host))
+        if self.host is not None:
+            self.host.validate()
         # JSON round-trip convenience: accept a plain dict for trace
         if isinstance(self.trace, dict):
             object.__setattr__(self, "trace", TraceConfig(**self.trace))
@@ -143,6 +156,29 @@ class SimConfig:
         """True iff the protocol event ledger is captured (``trace_on``
         with a nonzero ``ledger_cap``)."""
         return self.trace_on and self.trace.ledger_cap > 0
+
+    @property
+    def host_on(self) -> bool:
+        """True iff an active host/NIC stage is modeled (DESIGN.md §10).
+        ``host=None`` and zero-overhead configs (the ``ideal`` preset)
+        are structurally skipped — the scan is bit-identical to the
+        host-free simulator (golden-enforced)."""
+        return self.host is not None and not self.host.is_ideal
+
+    @property
+    def host_tx_on(self) -> bool:
+        """Send-side host gate active (nonzero TX cost)."""
+        return self.host_on and self.host.tx_on
+
+    @property
+    def host_rx_on(self) -> bool:
+        """Receive-side host FIFO active (nonzero RX cost)."""
+        return self.host_on and self.host.rx_on
+
+    @property
+    def host_model(self):
+        """The registered :class:`repro.core.hostmodel.HostModel`."""
+        return get_host_model(self.host.model)
 
 
 def _to_slots(nbytes: np.ndarray, slot_bytes: int) -> np.ndarray:
@@ -221,6 +257,7 @@ def _init_state(cfg: SimConfig, proto: Protocol, M: int):
         **proto.extra_state(cfg, M),          # protocol-private carry
         **(init_fabric_state(cfg) if cfg.fabric_on else {}),
         **(init_fault_state(cfg, M) if cfg.faults_on else {}),
+        **(cfg.host_model.init_state(cfg, M) if cfg.host_on else {}),
         **(telemetry.init_trace_state(cfg, M) if cfg.trace_on else {}),
         "sent": z((M,)),
         "granted_s": z((M,)),                 # sender-visible grant (slots)
@@ -291,6 +328,10 @@ def step_fn(cfg: SimConfig, proto: Protocol, S, n_sched: int, st, now):
 
     # ---- 2. senders pick + transmit one chunk (sender policy)
     chosen, has = _sender_select(cfg, proto, st, S, now)
+    if cfg.host_tx_on:
+        # host/NIC stage (DESIGN.md §10): the selected chunk only makes
+        # the wire if the host's TX CPU budget covers it this slot
+        has, st = cfg.host_model.host_tx(cfg, st, has, now)
     cm = jnp.minimum(chosen, M - 1)
     unsched_chunk = st["sent"][cm] < S["unsched"][cm]
     prio_chunk = proto.sender.chunk_prio(cfg, st, S, cm, unsched_chunk,
@@ -325,13 +366,31 @@ def step_fn(cfg: SimConfig, proto: Protocol, S, n_sched: int, st, now):
         # hosts behind a failed TOR drain nothing for the window; their
         # buffered chunks survive and resume draining when it lifts
         eligible = eligible & ~host_down_mask(cfg, now)[:, None]
+    q_eligible = eligible                       # backlog incl. stalled rows
+    if cfg.host_rx_on:
+        # host/NIC RX stage (DESIGN.md §10): finish service on ring
+        # entries whose CPU time elapsed (feeds recv -> grants AND
+        # completions), then gate the downlink on RX-ring room — a full
+        # ring backpressures the network (chunks stay queued, not lost)
+        hm = cfg.host_model
+        st = hm.rx_deliver(cfg, st, S, now)
+        room = hm.rx_room(cfg, st)
+        st = {**st, "h_rx_stall": st["h_rx_stall"]
+              + (eligible.any(axis=1) & ~room).astype(I32)}
+        eligible = eligible & room[:, None]
     slot_idx, any_elig, pmin = drain_select(st["r_prio"], st["r_seq"],
                                             eligible, backend=cfg.backend,
                                             interpret=cfg.pallas_interpret)
     hidx = (jnp.arange(H), slot_idx)
     drained_msg = jnp.where(any_elig, st["r_msg"][hidx], M)
-    recv = st["recv"].at[jnp.minimum(drained_msg, M - 1)].add(
-        jnp.where(any_elig, 1, 0), mode="drop")
+    if cfg.host_rx_on:
+        # drained chunks enter the RX ring; recv advances in rx_deliver
+        st = cfg.host_model.rx_accept(cfg, st, S, drained_msg, any_elig,
+                                      now)
+        recv = st["recv"]
+    else:
+        recv = st["recv"].at[jnp.minimum(drained_msg, M - 1)].add(
+            jnp.where(any_elig, 1, 0), mode="drop")
     r_valid = st["r_valid"].at[hidx].set(
         jnp.where(any_elig, False, st["r_valid"][hidx]))
     st = proto.on_drain(cfg, st, S, drained_msg, any_elig, now)
@@ -340,7 +399,7 @@ def step_fn(cfg: SimConfig, proto: Protocol, S, n_sched: int, st, now):
                            now, st["completion"])
 
     # ---- 5. stats
-    qlen = (eligible.sum(axis=1) - any_elig.astype(I32))
+    qlen = (q_eligible.sum(axis=1) - any_elig.astype(I32))
     drained_prio = jnp.where(any_elig, jnp.minimum(
         pmin, cfg.n_prios - 1), 0)
     prio_drained = st["prio_drained"].at[drained_prio].add(
@@ -436,6 +495,19 @@ def _finalize(cfg: SimConfig, table: MessageTable, S, alloc, st,
                                     np.asarray(st["completion"])
                                     - first_loss, -1),
             fault_lost_chunks=int(st["f_lost"]))
+    if cfg.host_on:
+        from repro.core.hostmodel import QSCALE
+        tor_kw["host"] = dataclasses.asdict(cfg.host)
+        if cfg.host_tx_on:
+            tor_kw.update(
+                host_tx_busy_frac=st["h_tx_work_q"]
+                / (cfg.max_slots * QSCALE),
+                host_tx_defer_frac=st["h_tx_defer"] / cfg.max_slots)
+        if cfg.host_rx_on:
+            tor_kw.update(
+                host_rx_stall_frac=st["h_rx_stall"] / cfg.max_slots,
+                host_rx_q_mean_chunks=st["h_rx_q_sum"] / cfg.max_slots,
+                host_rx_q_max_chunks=np.asarray(st["h_rx_q_max"]))
 
     trace = trace_summary = None
     if cfg.trace_on:
@@ -495,12 +567,7 @@ def simulate(cfg: SimConfig, table: MessageTable,
                      timings=timings)
 
 
-def run_sweep(cfg: SimConfig, spec=None, *,
-              seeds: list[int] | None = None, workload: str | None = None,
-              load: float | None = None, n_messages: int = 2000,
-              alloc=None, unsched_limit_bytes=None,
-              shared_alloc: bool = False,
-              return_state: bool = False) -> list:
+def run_sweep(cfg: SimConfig, spec) -> list:
     """Run N independent simulations batched inside one jit trace per
     static-parameter group, optionally sharded across devices with
     chunked scans and streaming statistics.
@@ -522,39 +589,16 @@ def run_sweep(cfg: SimConfig, spec=None, *,
     (the paper's workload-knowledge model, §4) so a same-length sweep
     compiles exactly once. With chunking/sharding/streaming off, results
     are bit-identical to sequential :func:`simulate` calls.
-
-    The pre-SweepSpec keyword signature (``tables`` as a list, ``seeds``/
-    ``workload``/``load``/``alloc``/... as loose kwargs) still works as a
-    thin shim, emits :class:`DeprecationWarning`, and is bit-identical to
-    the equivalent spec.
     """
     from repro.core import sweep as sweep_mod
-    if isinstance(spec, sweep_mod.SweepSpec):
-        return sweep_mod.run_spec(cfg, spec)
-    warnings.warn(
-        "run_sweep(cfg, tables, seeds=..., ...) is deprecated; pass a "
-        "single SweepSpec instead: run_sweep(cfg, SweepSpec(...))",
-        DeprecationWarning, stacklevel=2)
-    legacy = sweep_mod.SweepSpec(
-        tables=tuple(spec) if spec is not None else None,
-        seeds=tuple(seeds) if seeds is not None else None,
-        workload=workload, load=load, n_messages=n_messages,
-        alloc=alloc, unsched_limit_bytes=unsched_limit_bytes,
-        shared_alloc=shared_alloc, return_state=return_state)
-    return sweep_mod.run_spec(cfg, legacy)
-
-
-def run_sim(cfg: SimConfig, table: MessageTable,
-            alloc: PriorityAllocation | None = None,
-            unsched_limit_bytes=None, return_state: bool = False) -> dict:
-    """Deprecated dict-returning shim around :func:`simulate` (one
-    release of grace): same numbers, legacy schema."""
-    warnings.warn(
-        "run_sim is deprecated; call simulate(cfg, table) and use the "
-        "structured SimResult (`.to_legacy_dict()` bridges old code)",
-        DeprecationWarning, stacklevel=2)
-    return simulate(cfg, table, alloc, unsched_limit_bytes,
-                    return_state).to_legacy_dict()
+    if not isinstance(spec, sweep_mod.SweepSpec):
+        raise TypeError(
+            f"run_sweep(cfg, spec) takes a SweepSpec, got "
+            f"{type(spec).__name__}. The legacy kwargs signature (and "
+            f"run_sim) were removed after their deprecation release; "
+            f"build a SweepSpec: run_sweep(cfg, SweepSpec(seeds=..., "
+            f"workload=..., load=...)) — or pass tables=(...).")
+    return sweep_mod.run_spec(cfg, spec)
 
 
 def slowdown_percentiles(stats: dict | SimResult, pct: float = 99.0,
@@ -568,7 +612,7 @@ def slowdown_percentiles(stats: dict | SimResult, pct: float = 99.0,
 
 
 __all__ = ["SimConfig", "FabricConfig", "TraceConfig", "SimTrace",
-           "simulate", "run_sweep", "run_sim",
+           "HostConfig", "simulate", "run_sweep",
            "slowdown_percentiles", "prepare", "step_fn", "SimResult",
            "registered_protocols"]
 

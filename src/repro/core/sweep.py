@@ -59,7 +59,7 @@ from jax.sharding import Mesh, PartitionSpec
 
 from repro.core.priorities import allocate_priorities
 from repro.core.protocols import get_protocol, I32
-from repro.core.workloads import MessageTable, make_messages
+from repro.core.workloads import MessageTable, WorkloadSpec, make_messages
 from repro.core import telemetry
 
 # message-size bucket upper bounds (bytes) for streaming per-size
@@ -127,6 +127,10 @@ class SweepSpec:
     Exactly one run source: ``tables`` (MessageTables, lengths may
     differ — runs group by static parameters), or ``seeds`` +
     ``workload`` + ``load`` (one synthesized table per seed).
+    ``workload`` also accepts a full
+    :class:`~repro.core.workloads.WorkloadSpec` (any kind — scenarios
+    included); it carries its own load/shape parameters, so ``load``
+    must then stay ``None`` and each seed re-seeds the spec.
     ``alloc`` / ``unsched_limit_bytes`` accept a single value or one
     entry per table (priority-ablation sweeps, Figs. 17/18/20).
 
@@ -139,7 +143,7 @@ class SweepSpec:
     """
     tables: tuple[MessageTable, ...] | None = None
     seeds: tuple[int, ...] | None = None
-    workload: str | None = None
+    workload: str | WorkloadSpec | None = None
     load: float | None = None
     n_messages: int = 2000
     alloc: Any = None
@@ -154,9 +158,16 @@ class SweepSpec:
         if self.tables is not None:
             object.__setattr__(self, "tables", tuple(self.tables))
         elif self.seeds is None or self.workload is None \
-                or self.load is None:
+                or (self.load is None
+                    and not isinstance(self.workload, WorkloadSpec)):
             raise ValueError("SweepSpec needs `tables` or "
-                             "(`seeds`, `workload`, `load`)")
+                             "(`seeds`, `workload`, `load`) — "
+                             "`workload` may be a WorkloadSpec carrying "
+                             "its own load/shape parameters")
+        if isinstance(self.workload, WorkloadSpec) \
+                and self.load is not None:
+            raise ValueError("load is part of the WorkloadSpec; don't "
+                             "pass SweepSpec.load alongside one")
         if self.seeds is not None:
             object.__setattr__(self, "seeds",
                                tuple(int(s) for s in self.seeds))
@@ -178,6 +189,10 @@ class SweepSpec:
     def resolve_tables(self, cfg) -> list[MessageTable]:
         if self.tables is not None:
             return list(self.tables)
+        if isinstance(self.workload, WorkloadSpec):
+            return [self.workload.with_seed(s).build(
+                n_hosts=cfg.n_hosts, slot_bytes=cfg.slot_bytes)
+                for s in self.seeds]
         return [make_messages(self.workload, n_hosts=cfg.n_hosts,
                               load=self.load, n_messages=self.n_messages,
                               slot_bytes=cfg.slot_bytes, seed=s)
@@ -307,6 +322,13 @@ def _device_summary(cfg, st, acc) -> dict:
     if cfg.faults_on:
         out["f_lost"] = st["f_lost"]
         out["retx"] = st["retx"].sum()
+    if cfg.host_tx_on:
+        # float32: summed micro-slot work across hosts can pass 2**31
+        out["h_tx_work"] = st["h_tx_work_q"].sum(dtype=jnp.float32)
+        out["h_tx_defer"] = st["h_tx_defer"].sum()
+    if cfg.host_rx_on:
+        out["h_rx_stall"] = st["h_rx_stall"].sum()
+        out["h_rx_q_max"] = st["h_rx_q_max"].max()
     if cfg.trace_on:
         out.update(telemetry.reduce_state(cfg, st))
     return out
@@ -380,8 +402,10 @@ def _sweep_batch(cfg, proto, S_stack, aux_stack, n_sched: int,
         return local(S_stack, aux_stack)
     mesh = Mesh(np.asarray(jax.devices()[:n_dev]), ("runs",))
     P = PartitionSpec("runs")
+    # check_rep=False: pallas_call has no replication rule, and every
+    # array here is fully partitioned along "runs" anyway.
     return shard_map(local, mesh=mesh, in_specs=(P, P),
-                     out_specs=P)(S_stack, aux_stack)
+                     out_specs=P, check_rep=False)(S_stack, aux_stack)
 
 
 # ============================================================== results ==
@@ -408,6 +432,10 @@ class SweepStats:
     tor_up_busy_frac: float | None = None
     fault_lost_chunks: int | None = None
     retx_chunks: int | None = None
+    host_tx_busy_frac: float | None = None
+    host_tx_defer_frac: float | None = None
+    host_rx_stall_frac: float | None = None
+    host_rx_q_max_chunks: int | None = None
     trace_summary: dict | None = None
 
     @property
@@ -484,6 +512,14 @@ class SweepStats:
                 "n_counted": self.n_counted,
                 "warmup_frac": self.stream.warmup_frac,
             },
+            "host": None
+            if self.host_tx_busy_frac is None
+            and self.host_rx_stall_frac is None else {
+                "tx_busy_frac": r(self.host_tx_busy_frac),
+                "tx_defer_frac": r(self.host_tx_defer_frac),
+                "rx_stall_frac": r(self.host_rx_stall_frac),
+                "rx_q_max_chunks": self.host_rx_q_max_chunks,
+            },
             "trace": self.trace_summary,
         }
 
@@ -505,8 +541,11 @@ def _stats_from_row(cfg, stream: StreamSpec, row: dict, alloc,
             "grant_out_peak_bytes": int(row["tr_go_peak"]) * sb,
             "up_q_peak_bytes": int(row["tr_uq_peak"]) * sb
             if "tr_uq_peak" in row else None,
+            "host_rx_q_peak_chunks": int(row["tr_hq_peak"])
+            if "tr_hq_peak" in row else None,
             "timings": None,
         }
+    from repro.core.hostmodel import QSCALE
     return SweepStats(
         protocol=cfg.protocol, stream=stream, alloc=alloc,
         n_messages=n_messages, n_complete=int(row["n_complete"]),
@@ -525,6 +564,14 @@ def _stats_from_row(cfg, stream: StreamSpec, row: dict, alloc,
         if cfg.fabric_on else None,
         fault_lost_chunks=int(row["f_lost"]) if cfg.faults_on else None,
         retx_chunks=int(row["retx"]) if cfg.faults_on else None,
+        host_tx_busy_frac=float(row["h_tx_work"]) / (H * ms * QSCALE)
+        if cfg.host_tx_on else None,
+        host_tx_defer_frac=float(row["h_tx_defer"]) / (H * ms)
+        if cfg.host_tx_on else None,
+        host_rx_stall_frac=float(row["h_rx_stall"]) / (H * ms)
+        if cfg.host_rx_on else None,
+        host_rx_q_max_chunks=int(row["h_rx_q_max"])
+        if cfg.host_rx_on else None,
         trace_summary=trace_summary,
     )
 

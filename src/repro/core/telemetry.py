@@ -128,6 +128,8 @@ def init_trace_state(cfg, M: int) -> dict:
         st["tr_uq"] = z((T, U))      # instantaneous TOR uplink queues
         st["tr_uprio"] = z((T, P))   # cumulative uplink drains per level
         st["tr_uprio_c"] = z((P,))   # running counter (fabric.uplink_drain)
+    if cfg.host_rx_on:
+        st["tr_hq"] = z((T, H))      # instantaneous host RX-ring backlog
     if tr.ledger_cap > 0:
         st["tr_ev"] = jnp.full((tr.ledger_cap, 5), -1, I32)
         st["tr_ev_n"] = z(())        # total events SEEN (incl. dropped)
@@ -236,6 +238,9 @@ def capture_slot(cfg, st, S, now, prev, active, qlen):
             st["u_valid"].sum(axis=1).astype(I32), mode="drop")
         upd["tr_uprio"] = st["tr_uprio"].at[row].set(st["tr_uprio_c"],
                                                      mode="drop")
+    if cfg.host_rx_on:
+        upd["tr_hq"] = st["tr_hq"].at[row].set(
+            (st["h_rx_tail"] - st["h_rx_head"]).astype(I32), mode="drop")
     return {**st, **upd}
 
 
@@ -268,6 +273,7 @@ class SimTrace:
     ledger_cap: int
     n_events_seen: int
     timings: dict | None = None          # wallclock=True: AOT stage split
+    host_rx_q_chunks: np.ndarray | None = None   # (T, H) host RX backlog
 
     # ------------------------------------------------------------ derived
 
@@ -324,6 +330,9 @@ class SimTrace:
             if self.grant_out_bytes.size else 0,
             "up_q_peak_bytes": int(self.up_q_bytes.max())
             if self.up_q_bytes is not None and self.up_q_bytes.size else None,
+            "host_rx_q_peak_chunks": int(self.host_rx_q_chunks.max())
+            if self.host_rx_q_chunks is not None
+            and self.host_rx_q_chunks.size else None,
             "timings": self.timings,
         }
 
@@ -352,6 +361,8 @@ class SimTrace:
         if self.up_q_bytes is not None:
             out["up_q_bytes"] = self.up_q_bytes.tolist()
             out["up_prio_drained_bytes"] = self.prio_usage("up").tolist()
+        if self.host_rx_q_chunks is not None:
+            out["host_rx_q_chunks"] = self.host_rx_q_chunks.tolist()
         return out
 
     def to_perfetto(self, path=None) -> dict:
@@ -391,6 +402,12 @@ class SimTrace:
                            "args": {f"u{u}": int(self.up_q_bytes[k, u])
                                     for u in
                                     range(self.up_q_bytes.shape[1])}})
+            if self.host_rx_q_chunks is not None:
+                ev.append({"ph": "C", "pid": 0, "tid": 0, "ts": t,
+                           "name": "host_rx_q_chunks",
+                           "args":
+                           {f"h{h}": int(self.host_rx_q_chunks[k, h])
+                            for h in range(self.n_hosts)}})
 
         for slot, kind, msg, host, value in self.events.tolist():
             ev.append({"ph": "i", "s": "t", "pid": 1,
@@ -441,6 +458,8 @@ def finalize_trace(cfg, st: dict, timings: dict | None = None) -> SimTrace:
         if cfg.fabric_on else None,
         events=events, ledger_cap=tr.ledger_cap, n_events_seen=seen,
         timings=timings,
+        host_rx_q_chunks=np.asarray(st["tr_hq"]) if cfg.host_rx_on
+        else None,
     )
 
 
@@ -455,6 +474,8 @@ def reduce_state(cfg, st: dict) -> dict:
            "tr_go_peak": st["tr_grant_out"].max()}
     if cfg.fabric_on:
         out["tr_uq_peak"] = st["tr_uq"].max()
+    if cfg.host_rx_on:
+        out["tr_hq_peak"] = st["tr_hq"].max()
     if cfg.ledger_on:
         out["tr_ev_seen"] = st["tr_ev_n"]
     return out

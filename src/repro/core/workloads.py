@@ -60,6 +60,118 @@ class MessageTable:
     slot_bytes: int
 
 
+_SPEC_KINDS = ("poisson", "incast", "hotspot", "shuffle")
+
+# fields each kind requires beyond the defaults
+_SPEC_REQUIRED = {
+    "poisson": ("workload", "load"),
+    "incast": ("fan_in", "burst_bytes"),
+    "hotspot": ("workload", "load"),
+    "shuffle": ("bytes_per_pair",),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec:
+    """One frozen description of how to generate a :class:`MessageTable`.
+
+    Unifies :func:`make_messages` and the scenario generators
+    (``scenarios.incast`` / ``hotspot`` / ``shuffle``) behind a single
+    spec type that :class:`repro.core.sweep.SweepSpec` and
+    ``benchmarks/common.sim_sweep`` accept directly — those functions
+    remain as thin wrappers over ``WorkloadSpec(...).build(...)``, so
+    generation (and its RNG draw order) is defined in exactly one place.
+
+    Only the fields of the chosen ``kind`` matter; topology-dependent
+    parameters (``n_hosts``, ``slot_bytes``) stay out of the spec and go
+    to :meth:`build`, so one spec serves every topology in a sweep.
+    """
+    kind: str = "poisson"            # poisson | incast | hotspot | shuffle
+    # poisson / hotspot base workload
+    workload: str | None = None      # W1..W5
+    load: float | None = None
+    n_messages: int = 2000
+    seed: int = 0
+    max_bytes: int | None = None
+    incast: tuple[int, int, int] | None = None   # poisson burst overlay
+    # incast scenario
+    fan_in: int | None = None
+    burst_bytes: int | None = None
+    dst: int = 0
+    n_bursts: int = 1
+    period_slots: int = 2000
+    first_slot: int = 0
+    background: str | None = None
+    background_load: float = 0.0
+    n_background: int = 0
+    # hotspot
+    hot_fraction: float = 0.5
+    n_hot: int = 1
+    # shuffle
+    bytes_per_pair: int | None = None
+    spread_slots: int = 0
+
+    def __post_init__(self):
+        if self.kind not in _SPEC_KINDS:
+            raise ValueError(f"unknown WorkloadSpec kind {self.kind!r}; "
+                             f"one of {_SPEC_KINDS}")
+        missing = [f for f in _SPEC_REQUIRED[self.kind]
+                   if getattr(self, f) is None]
+        if missing:
+            raise ValueError(f"WorkloadSpec(kind={self.kind!r}) requires "
+                             f"{missing}")
+        if self.incast is not None:
+            object.__setattr__(self, "incast", tuple(self.incast))
+
+    def with_seed(self, seed: int) -> "WorkloadSpec":
+        return dataclasses.replace(self, seed=seed)
+
+    def build(self, *, n_hosts: int, slot_bytes: int = 256) -> MessageTable:
+        """Generate the table for a concrete topology."""
+        if self.kind == "poisson":
+            return _poisson_table(self, n_hosts, slot_bytes)
+        # scenario kinds: generation lives in repro.core.scenarios
+        # (deferred import — scenarios builds on this module)
+        from repro.core import scenarios
+        impl = {"incast": scenarios._incast_impl,
+                "hotspot": scenarios._hotspot_impl,
+                "shuffle": scenarios._shuffle_impl}[self.kind]
+        return impl(self, n_hosts, slot_bytes)
+
+
+def _poisson_table(ws: WorkloadSpec, n_hosts: int,
+                   slot_bytes: int) -> MessageTable:
+    rng = np.random.default_rng(ws.seed)
+    sizes = sample_sizes(ws.workload, ws.n_messages, rng, ws.max_bytes)
+    # slots consumed per message on a link (ceil -> includes packetization)
+    slots = np.maximum((sizes + slot_bytes - 1) // slot_bytes, 1)
+    # aggregate service capacity: n_hosts slots per tick
+    mean_gap = slots.mean() / (ws.load * n_hosts)
+    gaps = rng.exponential(mean_gap, ws.n_messages)
+    arrivals = np.floor(np.cumsum(gaps)).astype(np.int64)
+    src = rng.integers(0, n_hosts, ws.n_messages)
+    dst = rng.integers(0, n_hosts - 1, ws.n_messages)
+    dst = np.where(dst >= src, dst + 1, dst)   # dst != src
+    tbl = MessageTable(src.astype(np.int32), dst.astype(np.int32),
+                       sizes, arrivals.astype(np.int32), ws.workload,
+                       ws.load, slot_bytes)
+    if ws.incast is not None:
+        from repro.core import scenarios
+        fan_in, burst_bytes, period_slots = ws.incast
+        if period_slots < 1:
+            raise ValueError(f"incast period_slots must be >= 1, got "
+                             f"{period_slots}")
+        horizon = int(arrivals.max()) if ws.n_messages else 0
+        bursts = scenarios.incast(
+            fan_in, burst_bytes, n_hosts=n_hosts, slot_bytes=slot_bytes,
+            n_bursts=max(horizon // period_slots, 1),
+            period_slots=period_slots, first_slot=period_slots,
+            seed=ws.seed)
+        tbl = scenarios.merge_tables(tbl, bursts, workload=ws.workload,
+                                     load=ws.load)
+    return tbl
+
+
 def make_messages(workload: str, *, n_hosts: int, load: float,
                   n_messages: int, slot_bytes: int, seed: int = 0,
                   max_bytes: int | None = None,
@@ -74,36 +186,13 @@ def make_messages(workload: str, *, n_hosts: int, load: float,
     ``fan_in`` senders each emit one ``burst_bytes`` response to host 0
     simultaneously (``repro.core.scenarios.incast``), until the
     background's arrival horizon is covered.
+
+    Thin wrapper over ``WorkloadSpec(kind="poisson", ...).build(...)``.
     """
-    rng = np.random.default_rng(seed)
-    sizes = sample_sizes(workload, n_messages, rng, max_bytes)
-    # slots consumed per message on a link (ceil -> includes packetization)
-    slots = np.maximum((sizes + slot_bytes - 1) // slot_bytes, 1)
-    # aggregate service capacity: n_hosts slots per tick
-    mean_gap = slots.mean() / (load * n_hosts)
-    gaps = rng.exponential(mean_gap, n_messages)
-    arrivals = np.floor(np.cumsum(gaps)).astype(np.int64)
-    src = rng.integers(0, n_hosts, n_messages)
-    dst = rng.integers(0, n_hosts - 1, n_messages)
-    dst = np.where(dst >= src, dst + 1, dst)   # dst != src
-    tbl = MessageTable(src.astype(np.int32), dst.astype(np.int32),
-                       sizes, arrivals.astype(np.int32), workload, load,
-                       slot_bytes)
-    if incast is not None:
-        # deferred import: scenarios builds on this module's generators
-        from repro.core import scenarios
-        fan_in, burst_bytes, period_slots = incast
-        if period_slots < 1:
-            raise ValueError(f"incast period_slots must be >= 1, got "
-                             f"{period_slots}")
-        horizon = int(arrivals.max()) if n_messages else 0
-        bursts = scenarios.incast(
-            fan_in, burst_bytes, n_hosts=n_hosts, slot_bytes=slot_bytes,
-            n_bursts=max(horizon // period_slots, 1),
-            period_slots=period_slots, first_slot=period_slots, seed=seed)
-        tbl = scenarios.merge_tables(tbl, bursts, workload=workload,
-                                     load=load)
-    return tbl
+    return WorkloadSpec(kind="poisson", workload=workload, load=load,
+                        n_messages=n_messages, seed=seed,
+                        max_bytes=max_bytes, incast=incast).build(
+                            n_hosts=n_hosts, slot_bytes=slot_bytes)
 
 
 def bytes_weighted_unsched_fraction(sizes: np.ndarray, unsched_limit: int) -> float:

@@ -1,0 +1,386 @@
+"""Host/NIC-stage tests (DESIGN.md §10).
+
+The two contracts under test:
+
+1. **Bit-identity when off.** ``host=None`` and the ``ideal`` preset
+   (all costs zero) are structurally skipped, so the scan reproduces
+   BOTH committed goldens bit-for-bit for every protocol — the host
+   stage can never perturb a host-free run.
+2. **Physics when on.** TX token bucket: sustained rate 1/cost with a
+   ``tx_queue_cap``-deep cold burst; batching amortizes the interrupt
+   cost; the RX FIFO serializes per-chunk service, delays ``recv`` (and
+   therefore grants AND completions), and backpressures the downlink
+   when full. Chunk conservation extends with the ring occupancy, and
+   everything composes with fabric/faults/sweeps/chunked scans.
+"""
+import dataclasses
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import (SimConfig, FabricConfig, HostConfig, HostModel,
+                        SweepSpec, TraceConfig, host_preset,
+                        register_host_model, simulate, run_sweep,
+                        make_messages)
+from repro.core.hostmodel import (QSCALE, HOST_PRESETS, as_host_config,
+                                  get_host_model)
+from repro.core.workloads import MessageTable
+
+GOLDEN = Path(__file__).parent / "golden"
+ALL_PROTOS = ["homa", "basic", "phost", "pias", "pfabric", "ndp"]
+SMALL = dict(n_hosts=4, max_slots=2500, ring_cap=512)
+
+
+def _one_message(chunks: int, n_hosts: int = 2) -> MessageTable:
+    """One message of ``chunks`` slots, host 0 -> 1, arriving at 0."""
+    return MessageTable(np.array([0], np.int32), np.array([1], np.int32),
+                        np.array([chunks * 256], np.int64),
+                        np.array([0], np.int32), "single", 0.1, 256)
+
+
+def _completion_slot(cfg, tbl) -> int:
+    r = simulate(cfg, tbl)
+    assert r.completion_rate == 1.0
+    return int(r.completion.max())
+
+
+# ---------------------------------------------- bit-identity when off ----
+
+def _golden_assert(r, want, fabric: bool):
+    assert [int(x) for x in r.completion] == want["completion"]
+    assert r.lost_chunks == want["lost_chunks"]
+    assert [int(x) for x in r.q_max_bytes] == want["q_max_bytes"]
+    assert [int(x) for x in r.prio_drained_bytes] \
+        == want["prio_drained_bytes"]
+    if fabric:
+        assert [int(x) for x in r.tor_up_q_max_bytes] \
+            == want["tor_up_q_max_bytes"]
+        assert r.tor_up_lost_chunks == want["tor_up_lost_chunks"]
+
+
+@pytest.mark.parametrize("host", [None, "ideal",
+                                  {"tx_cost_slots": 0.0}])
+@pytest.mark.parametrize("proto", ALL_PROTOS)
+def test_ideal_host_matches_disabled_golden(proto, host):
+    """host=None, the ideal preset, and an explicit all-zero config all
+    reproduce the fabric-disabled golden bit-for-bit (acceptance)."""
+    g = json.loads((GOLDEN / "fabric_disabled.json").read_text())
+    meta, want = g["meta"], g["protocols"][proto]
+    tbl = make_messages(meta["workload"], n_hosts=meta["n_hosts"],
+                        load=meta["load"], n_messages=meta["n_messages"],
+                        slot_bytes=meta["slot_bytes"], seed=meta["seed"])
+    cfg = SimConfig(protocol=proto, n_hosts=meta["n_hosts"],
+                    max_slots=meta["max_slots"],
+                    ring_cap=meta["ring_cap"], host=host)
+    assert not cfg.host_on
+    _golden_assert(simulate(cfg, tbl), want, fabric=False)
+
+
+@pytest.mark.parametrize("host", [None, "ideal"])
+@pytest.mark.parametrize("proto", ALL_PROTOS)
+def test_ideal_host_matches_enabled_golden(proto, host):
+    g = json.loads((GOLDEN / "fabric_enabled.json").read_text())
+    meta, want = g["meta"], g["protocols"][proto]
+    tbl = make_messages(meta["workload"], n_hosts=meta["n_hosts"],
+                        load=meta["load"], n_messages=meta["n_messages"],
+                        slot_bytes=meta["slot_bytes"], seed=meta["seed"])
+    cfg = SimConfig(protocol=proto, n_hosts=meta["n_hosts"],
+                    max_slots=meta["max_slots"], ring_cap=meta["ring_cap"],
+                    fabric=FabricConfig(racks=meta["racks"],
+                                        oversub=meta["oversub"],
+                                        up_cap=meta["up_cap"]),
+                    host=host)
+    _golden_assert(simulate(cfg, tbl), want, fabric=True)
+
+
+# --------------------------------------------------- TX-side physics ----
+
+def test_tx_cost_throttles_sustained_rate():
+    """tx_cost_slots=2 halves the sustained send rate: one long message
+    takes ~2x the slots of the host-free run."""
+    tbl = _one_message(200)
+    base = _completion_slot(
+        SimConfig(protocol="homa", n_hosts=2, max_slots=2000,
+                  ring_cap=512), tbl)
+    slow = _completion_slot(
+        SimConfig(protocol="homa", n_hosts=2, max_slots=2000, ring_cap=512,
+                  host=HostConfig(tx_cost_slots=2.0)), tbl)
+    assert 1.8 * base < slow < 2.3 * base, (base, slow)
+
+
+def test_tx_queue_cap_lets_cold_burst_through():
+    """The bucket starts full (TX ring pre-fill): with a deep ring a
+    short message goes out at line rate despite a high per-chunk cost;
+    with a depth-1 ring the same message pays the cost per chunk."""
+    tbl = _one_message(16)
+    mk = lambda cap: SimConfig(              # noqa: E731
+        protocol="homa", n_hosts=2, max_slots=800, ring_cap=512,
+        host=HostConfig(tx_cost_slots=4.0, tx_queue_cap=cap))
+    deep = _completion_slot(mk(32), tbl)
+    shallow = _completion_slot(mk(1), tbl)
+    base = _completion_slot(SimConfig(protocol="homa", n_hosts=2,
+                                      max_slots=800, ring_cap=512), tbl)
+    assert deep <= base + 2, (deep, base)        # burst absorbed
+    assert shallow >= 4 * 15, (shallow, base)    # pays ~4 slots/chunk
+    assert shallow > 2 * deep, (shallow, deep)
+
+
+def test_tx_batching_amortizes_interrupt_cost():
+    """(cost 1, +8 every 8th chunk) sustains ~2 slots/chunk — the same
+    as a flat cost of 2 — and strictly beats paying 8 on every chunk."""
+    tbl = _one_message(160)
+    batched = _completion_slot(
+        SimConfig(protocol="homa", n_hosts=2, max_slots=4000, ring_cap=512,
+                  host=HostConfig(tx_cost_slots=1.0, tx_batch=8,
+                                  tx_batch_cost_slots=8.0,
+                                  tx_queue_cap=8)), tbl)
+    flat = _completion_slot(
+        SimConfig(protocol="homa", n_hosts=2, max_slots=4000, ring_cap=512,
+                  host=HostConfig(tx_cost_slots=2.0)), tbl)
+    every = _completion_slot(
+        SimConfig(protocol="homa", n_hosts=2, max_slots=4000, ring_cap=512,
+                  host=HostConfig(tx_cost_slots=1.0, tx_batch=1,
+                                  tx_batch_cost_slots=8.0)), tbl)
+    assert 0.8 * flat < batched < 1.2 * flat, (batched, flat)
+    assert batched < 0.5 * every, (batched, every)
+
+
+# --------------------------------------------------- RX-side physics ----
+
+def test_rx_cost_monotonically_delays_completion():
+    tbl = _one_message(100)
+    done = []
+    for cost in (0.0, 0.5, 2.0, 4.0):
+        host = HostConfig(rx_cost_slots=cost) if cost else None
+        done.append(_completion_slot(
+            SimConfig(protocol="homa", n_hosts=2, max_slots=4000,
+                      ring_cap=512, host=host), tbl))
+    assert done == sorted(done), done
+    assert done[-1] > 3.5 * done[0], done       # 4 slots/chunk serialized
+
+
+def test_rx_ring_backpressures_downlink():
+    """A tiny RX ring with slow service must stall the downlink (the
+    chunk stays queued in the network) and record the stall slots."""
+    tbl = _one_message(100)
+    cfg = SimConfig(protocol="homa", n_hosts=2, max_slots=4000,
+                    ring_cap=512,
+                    host=HostConfig(rx_cost_slots=4.0, rx_queue_cap=4))
+    r = simulate(cfg, tbl)
+    assert r.completion_rate == 1.0
+    assert int(r.host_rx_q_max_chunks.max()) == 4      # pinned at cap
+    assert float(r.host_rx_stall_frac.max()) > 0.0
+    assert r.summary()["host"]["rx_stall_frac"] > 0.0
+
+
+def test_preset_latency_ordering():
+    """ideal <= kernel_bypass < kernel_stack on the same workload."""
+    tbl = make_messages("W2", n_hosts=4, load=0.4, n_messages=150,
+                        slot_bytes=256, seed=0, max_bytes=65_536)
+    p50 = {}
+    for preset in ("ideal", "kernel_bypass", "kernel_stack"):
+        cfg = SimConfig(protocol="homa", n_hosts=4, max_slots=20_000,
+                        ring_cap=2048, host=preset)
+        r = simulate(cfg, tbl)
+        assert r.completion_rate == 1.0, preset
+        p50[preset] = r.summary()["p50_all"]
+    assert p50["ideal"] <= p50["kernel_bypass"] < p50["kernel_stack"], p50
+
+
+# ------------------------------------------------------- conservation ----
+
+@pytest.mark.parametrize("proto", ["homa", "basic", "ndp"])
+def test_conservation_with_host_ring(proto):
+    """sent == recv + downlink ring + RX ring occupancy (+ lost): the
+    host FIFO is a real buffer in the chunk-conservation ledger."""
+    tbl = make_messages("W3", n_hosts=6, load=0.6, n_messages=200,
+                        slot_bytes=256, seed=3)
+    cfg = SimConfig(protocol=proto, n_hosts=6, max_slots=4000,
+                    ring_cap=512, host="kernel_stack")
+    r = simulate(cfg, tbl, return_state=True)
+    st = r.state
+    rx_ring = int((st["h_rx_tail"] - st["h_rx_head"]).sum())
+    assert int(st["recv"].sum()) + int(st["r_valid"].sum()) + rx_ring \
+        + int(st["lost"]) == int(st["sent"].sum())
+
+
+def test_conservation_with_host_and_fabric():
+    tbl = make_messages("W3", n_hosts=12, load=0.6, n_messages=200,
+                        slot_bytes=256, seed=3)
+    cfg = SimConfig(protocol="homa", n_hosts=12, max_slots=6000,
+                    ring_cap=512,
+                    fabric=FabricConfig(racks=3, oversub=2.0),
+                    host="kernel_bypass")
+    r = simulate(cfg, tbl, return_state=True)
+    st = r.state
+    rx_ring = int((st["h_rx_tail"] - st["h_rx_head"]).sum())
+    assert int(st["recv"].sum()) + int(st["r_valid"].sum()) \
+        + int(st["u_valid"].sum()) + rx_ring + int(st["lost"]) \
+        + int(st["u_lost"]) == int(st["sent"].sum())
+
+
+# ------------------------------------------------------- composition ----
+
+def test_host_composes_with_faults_and_recovers():
+    tbl = make_messages("W2", n_hosts=8, load=0.5, n_messages=150,
+                        slot_bytes=256, seed=1)
+    fab = FabricConfig(racks=2, oversub=2.0).with_lossy(up_loss=0.01)
+    cfg = SimConfig(protocol="homa", n_hosts=8, max_slots=20_000,
+                    ring_cap=512, fabric=fab, host="kernel_bypass")
+    r = simulate(cfg, tbl)
+    assert r.completion_rate == 1.0
+    assert r.summary()["faults"]["retx_chunks"] > 0
+    assert r.host["rx_cost_slots"] == 0.5
+
+
+def test_sweep_with_host_bit_identical_to_sequential():
+    tables = [make_messages("W2", n_hosts=4, load=0.5, n_messages=100,
+                            slot_bytes=256, seed=s) for s in range(3)]
+    cfg = SimConfig(protocol="homa", host="kernel_stack", **SMALL)
+    seq = [simulate(cfg, t) for t in tables]
+    swe = run_sweep(cfg, SweepSpec(tables=tables))
+    for a, b in zip(seq, swe):
+        np.testing.assert_array_equal(a.completion, b.completion)
+        np.testing.assert_array_equal(a.host_tx_busy_frac,
+                                      b.host_tx_busy_frac)
+        np.testing.assert_array_equal(a.host_rx_q_max_chunks,
+                                      b.host_rx_q_max_chunks)
+
+
+def test_chunked_scan_with_host_bit_identical():
+    tbl = make_messages("W2", n_hosts=4, load=0.5, n_messages=100,
+                        slot_bytes=256, seed=0)
+    cfg = SimConfig(protocol="homa", host="kernel_stack", **SMALL)
+    flat = run_sweep(cfg, SweepSpec(tables=[tbl]))[0]
+    chunked = run_sweep(cfg, SweepSpec(tables=[tbl], chunk_slots=500))[0]
+    np.testing.assert_array_equal(flat.completion, chunked.completion)
+    np.testing.assert_array_equal(flat.host_tx_busy_frac,
+                                  chunked.host_tx_busy_frac)
+
+
+def test_streaming_sweep_carries_host_stats():
+    cfg = SimConfig(protocol="homa", host="kernel_stack", **SMALL)
+    spec = SweepSpec(workload="W2", load=0.5, seeds=(0, 1),
+                     n_messages=100, streaming=True, chunk_slots=500)
+    stats = run_sweep(cfg, spec)
+    for s in stats:
+        assert s.host_tx_busy_frac is not None \
+            and 0 < s.host_tx_busy_frac < 1
+        assert s.host_rx_q_max_chunks > 0
+        d = s.summary()["host"]
+        assert set(d) >= {"tx_busy_frac", "tx_defer_frac",
+                          "rx_stall_frac", "rx_q_max_chunks"}
+
+
+def test_trace_captures_host_rx_backlog():
+    tbl = make_messages("W2", n_hosts=4, load=0.5, n_messages=100,
+                        slot_bytes=256, seed=0)
+    cfg = SimConfig(protocol="homa", host="kernel_stack",
+                    trace=TraceConfig(enabled=True, stride=32), **SMALL)
+    r = simulate(cfg, tbl)
+    tr = r.trace
+    assert tr.host_rx_q_chunks is not None
+    assert tr.host_rx_q_chunks.shape[1] == 4
+    peak = tr.reduce()["host_rx_q_peak_chunks"]
+    assert peak == int(tr.host_rx_q_chunks.max()) > 0
+    assert "host_rx_q_chunks" in tr.to_timeseries_json()
+    # untraced hosts don't grow a series
+    cfg2 = SimConfig(protocol="homa",
+                     trace=TraceConfig(enabled=True, stride=32), **SMALL)
+    assert simulate(cfg2, tbl).trace.host_rx_q_chunks is None
+
+
+# --------------------------------------------- config + interface API ----
+
+def test_host_config_normalization_and_result_echo():
+    assert as_host_config(None) is None
+    assert as_host_config("kernel_stack") == HOST_PRESETS["kernel_stack"]
+    hc = as_host_config({"tx_cost_slots": 1.5, "rx_queue_cap": 32})
+    assert hc.tx_cost_q == int(1.5 * QSCALE) and hc.rx_queue_cap == 32
+    with pytest.raises(TypeError, match="HostConfig"):
+        as_host_config(42)
+    with pytest.raises(ValueError, match="preset"):
+        SimConfig(host="not-a-preset")
+    with pytest.raises(ValueError, match="tx_cost_slots"):
+        SimConfig(host={"tx_cost_slots": -1.0})
+    with pytest.raises(ValueError, match="rx_queue_cap"):
+        SimConfig(host={"rx_queue_cap": 0})
+    with pytest.raises(ValueError, match="unknown host model"):
+        SimConfig(host={"model": "fpga"})
+    # structural gates
+    assert not SimConfig(host="ideal").host_on
+    assert SimConfig(host="kernel_stack").host_tx_on
+    assert not SimConfig(host={"rx_cost_slots": 1.0}).host_tx_on
+    assert SimConfig(host={"rx_cost_slots": 1.0}).host_rx_on
+    # round-trip: the result echoes the resolved config
+    tbl = _one_message(10)
+    r = simulate(SimConfig(protocol="homa", n_hosts=2, max_slots=400,
+                           ring_cap=128, host="kernel_bypass"), tbl)
+    assert HostConfig(**r.host) == HOST_PRESETS["kernel_bypass"]
+    assert json.loads(r.to_json())["host"]["tx_cost_slots"] == 0.25
+
+
+def test_host_model_interface_is_enforced():
+    """abc enforcement: a model missing any hook cannot instantiate,
+    and the registry only takes HostModel instances."""
+
+    class Incomplete(HostModel):
+        name = "incomplete"
+
+        def init_state(self, cfg, M):
+            return {}
+
+    with pytest.raises(TypeError, match="abstract"):
+        Incomplete()
+    with pytest.raises(TypeError, match="HostModel instance"):
+        register_host_model(object())
+    with pytest.raises(ValueError, match="registered"):
+        get_host_model("nope")
+    assert host_preset("kernel_stack").tx_batch == 8
+    with pytest.raises(ValueError, match="preset"):
+        host_preset("nope")
+
+
+def test_custom_host_model_pluggable():
+    """A registered alternative model routes the scan through its own
+    hooks — the interface seam is real, not cpu-only."""
+    import jax.numpy as jnp
+    from repro.core.protocols import I32
+    from repro.core.hostmodel import _HOST_MODELS
+    cpu = get_host_model("cpu")
+
+    class DoubleCost(type(cpu)):
+        """cpu model but every TX chunk charges twice the configured
+        cost: observable as ~2x the completion time."""
+        name = "double"
+
+        def host_tx(self, cfg, st, want, now):
+            hc = cfg.host
+            budget = jnp.minimum(st["h_tx_budget_q"] + QSCALE,
+                                 2 * hc.tx_burst_q)
+            charge = jnp.full_like(budget, 2 * hc.tx_cost_q)
+            ok = budget >= charge
+            sent = want & ok
+            spend = jnp.where(sent, charge, 0)
+            return sent, {**st, "h_tx_budget_q": budget - spend,
+                          "h_tx_work_q": st["h_tx_work_q"] + spend,
+                          "h_tx_defer": st["h_tx_defer"]
+                          + (want & ~ok).astype(I32)}
+
+    register_host_model(DoubleCost())
+    try:
+        tbl = _one_message(100)
+        single = _completion_slot(
+            SimConfig(protocol="homa", n_hosts=2, max_slots=4000,
+                      ring_cap=512,
+                      host=HostConfig(tx_cost_slots=1.0)), tbl)
+        double = _completion_slot(
+            SimConfig(protocol="homa", n_hosts=2, max_slots=4000,
+                      ring_cap=512,
+                      host=HostConfig(model="double",
+                                      tx_cost_slots=1.0)), tbl)
+        assert 1.7 * single < double < 2.3 * single, (single, double)
+    finally:
+        del _HOST_MODELS["double"]

@@ -4,7 +4,7 @@ import numpy as np
 import pytest
 
 from repro.core import (SimConfig, SimResult, SweepSpec, simulate,
-                        run_sweep, run_sim, get_protocol,
+                        run_sweep, get_protocol,
                         registered_protocols, make_messages)
 from repro.core import sim as sim_mod
 from repro.core.protocols import Protocol, register, _REGISTRY
@@ -71,18 +71,24 @@ def test_simresult_fields_and_summary():
     assert json.loads(res.to_json())["n_messages"] == 150
 
 
-def test_run_sim_shim_warns_and_matches_simulate():
-    tbl = make_messages("W3", n_hosts=4, load=0.7, n_messages=120,
-                        slot_bytes=256, seed=2)
+def test_legacy_shims_are_gone():
+    """The deprecation release shipped; the shims must be fully removed,
+    not just warning — the old names may not silently come back."""
+    import repro.core
+    import repro.core.sim
+    assert not hasattr(repro.core, "run_sim")
+    assert not hasattr(repro.core.sim, "run_sim")
+    assert "run_sim" not in repro.core.__all__
+    assert "run_sim" not in repro.core.sim.__all__
+    assert not hasattr(SimResult, "to_legacy_dict")
+    # the legacy run_sweep(cfg, tables, **kwargs) form errors loudly
     cfg = SimConfig(protocol="homa", **SMALL)
-    with pytest.warns(DeprecationWarning, match="run_sim is deprecated"):
-        d = run_sim(cfg, tbl)
-    r = simulate(cfg, tbl)
-    np.testing.assert_array_equal(d["completion"], r.completion)
-    np.testing.assert_array_equal(d["done"], r.done)
-    assert d["lost_chunks"] == r.lost_chunks
-    assert set(d) >= {"alloc", "slowdown", "busy_frac", "q_max_bytes",
-                      "prio_drained_bytes", "n_complete"}
+    tbl = make_messages("W3", n_hosts=4, load=0.7, n_messages=50,
+                        slot_bytes=256, seed=2)
+    with pytest.raises(TypeError, match="SweepSpec"):
+        run_sweep(cfg, [tbl])
+    with pytest.raises(TypeError):
+        run_sweep(cfg, [tbl], shared_alloc=True)
 
 
 # ----------------------------------------------------------- sweep runner
@@ -105,21 +111,6 @@ def test_sweep_bit_identical_to_sequential(proto):
         np.testing.assert_array_equal(ok, np.isfinite(b.slowdown))
         np.testing.assert_array_equal(a.slowdown[ok], b.slowdown[ok])
         assert a.lost_chunks == b.lost_chunks
-
-
-def test_legacy_sweep_kwargs_warn_and_match_spec():
-    """The pre-SweepSpec signature survives as a shim: DeprecationWarning
-    plus bit-identical results to the equivalent spec."""
-    cfg = SimConfig(protocol="homa", **SMALL)
-    tables = [make_messages("W2", n_hosts=4, load=0.6, n_messages=100,
-                            slot_bytes=256, seed=s) for s in range(2)]
-    with pytest.warns(DeprecationWarning, match="SweepSpec"):
-        legacy = run_sweep(cfg, tables, shared_alloc=True)
-    spec = run_sweep(cfg, SweepSpec(tables=tables, shared_alloc=True))
-    for a, b in zip(legacy, spec):
-        np.testing.assert_array_equal(a.completion, b.completion)
-        np.testing.assert_array_equal(a.slowdown[a.done],
-                                      b.slowdown[b.done])
 
 
 def test_sweep_single_trace_with_shared_alloc():
@@ -177,9 +168,8 @@ def test_sweep_spec_validation():
                         slot_bytes=256, seed=0)
     with pytest.raises(ValueError, match="tables"):
         SweepSpec()
-    with pytest.raises(ValueError, match="tables"):
-        with pytest.warns(DeprecationWarning):
-            run_sweep(cfg)
+    with pytest.raises(TypeError, match="SweepSpec"):
+        run_sweep(cfg, None)
     with pytest.raises(ValueError, match="chunk_slots"):
         SweepSpec(tables=[tbl], chunk_slots=0)
     with pytest.raises(ValueError, match="return_state"):

@@ -1,0 +1,193 @@
+"""WorkloadSpec unification tests (+ the FabricConfig.with_* moves).
+
+``WorkloadSpec`` is now the single generation recipe behind
+``make_messages`` and the scenario generators; the public functions are
+thin wrappers, so every pair (wrapper, spec.build) must be bit-identical
+— the RNG draw order is part of the contract. Scenario determinism and
+``merge_tables`` conservation are pinned for hotspot and shuffle
+(incast's are covered in test_protocols.py), parameterized over seeds.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (SimConfig, FabricConfig, FaultConfig, SweepSpec,
+                        WorkloadSpec, run_sweep, make_messages)
+from repro.core import scenarios
+from repro.core.scenarios import (hotspot, incast, shuffle, merge_tables,
+                                  lossy_fabric, uplink_failure,
+                                  tor_failure)
+
+SEEDS = [3, 11]
+
+
+def _eq(a, b):
+    for f in ("src", "dst", "size", "arrival_slot"):
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f))
+    assert (a.workload, a.load, a.slot_bytes) \
+        == (b.workload, b.load, b.slot_bytes)
+
+
+# ----------------------------------------------------------- validation ----
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="kind"):
+        WorkloadSpec(kind="uniform")
+    with pytest.raises(ValueError, match="workload"):
+        WorkloadSpec(kind="poisson", load=0.5)
+    with pytest.raises(ValueError, match="load"):
+        WorkloadSpec(kind="hotspot", workload="W2")
+    with pytest.raises(ValueError, match="fan_in"):
+        WorkloadSpec(kind="incast", burst_bytes=1000)
+    with pytest.raises(ValueError, match="bytes_per_pair"):
+        WorkloadSpec(kind="shuffle")
+    ws = WorkloadSpec(workload="W1", load=0.5, incast=[4, 2000, 500])
+    assert ws.incast == (4, 2000, 500)       # normalized to tuple
+    assert ws.with_seed(7).seed == 7 and ws.seed == 0
+
+
+# --------------------------------------------------- wrapper equivalence ---
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_make_messages_is_spec_build(seed):
+    a = make_messages("W2", n_hosts=8, load=0.6, n_messages=300,
+                      slot_bytes=256, seed=seed, max_bytes=100_000,
+                      incast=(4, 2000, 500))
+    b = WorkloadSpec(workload="W2", load=0.6, n_messages=300, seed=seed,
+                     max_bytes=100_000, incast=(4, 2000, 500)).build(
+                         n_hosts=8, slot_bytes=256)
+    _eq(a, b)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_scenarios_are_spec_build(seed):
+    _eq(incast(5, 20_000, n_hosts=8, n_bursts=3, seed=seed,
+               background="W1", background_load=0.2, n_background=100),
+        WorkloadSpec(kind="incast", fan_in=5, burst_bytes=20_000,
+                     n_bursts=3, seed=seed, background="W1",
+                     background_load=0.2, n_background=100).build(
+                         n_hosts=8))
+    _eq(hotspot("W2", n_hosts=8, load=0.5, n_messages=200, seed=seed,
+                hot_fraction=0.6, n_hot=2),
+        WorkloadSpec(kind="hotspot", workload="W2", load=0.5,
+                     n_messages=200, seed=seed, hot_fraction=0.6,
+                     n_hot=2).build(n_hosts=8))
+    _eq(shuffle(n_hosts=8, bytes_per_pair=5000, spread_slots=400,
+                seed=seed),
+        WorkloadSpec(kind="shuffle", bytes_per_pair=5000,
+                     spread_slots=400, seed=seed).build(n_hosts=8))
+
+
+# ------------------------------------------- determinism (hotspot/shuffle) -
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_hotspot_deterministic_and_skewed(seed):
+    a = hotspot("W2", n_hosts=8, load=0.5, n_messages=400, seed=seed,
+                hot_fraction=0.7, n_hot=2)
+    b = hotspot("W2", n_hosts=8, load=0.5, n_messages=400, seed=seed,
+                hot_fraction=0.7, n_hot=2)
+    _eq(a, b)
+    c = hotspot("W2", n_hosts=8, load=0.5, n_messages=400, seed=seed + 1,
+                hot_fraction=0.7, n_hot=2)
+    assert not np.array_equal(a.dst, c.dst)
+    assert (a.src != a.dst).all()
+    # the hot set dominates destinations
+    hot_share = np.isin(a.dst, [0, 1]).mean()
+    assert hot_share > 0.5, hot_share
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_shuffle_deterministic_every_pair_once(seed):
+    a = shuffle(n_hosts=6, bytes_per_pair=4000, spread_slots=300,
+                seed=seed)
+    b = shuffle(n_hosts=6, bytes_per_pair=4000, spread_slots=300,
+                seed=seed)
+    _eq(a, b)
+    c = shuffle(n_hosts=6, bytes_per_pair=4000, spread_slots=300,
+                seed=seed + 1)
+    assert not np.array_equal(a.src, c.src)
+    assert (a.src != a.dst).all()
+    pairs = set(zip(a.src.tolist(), a.dst.tolist()))
+    assert len(pairs) == len(a.src) == 6 * 5    # every ordered pair once
+    assert (np.diff(a.arrival_slot) >= 0).all()
+
+
+# ------------------------------------------- merge_tables conservation -----
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_merge_conserves_hotspot_and_shuffle(seed):
+    a = hotspot("W3", n_hosts=8, load=0.4, n_messages=200, seed=seed)
+    b = shuffle(n_hosts=8, bytes_per_pair=3000, spread_slots=500,
+                seed=seed)
+    m = merge_tables(a, b, workload="mix", load=0.4)
+    assert len(m.src) == len(a.src) + len(b.src)
+    # multiset conservation of every (src, dst, size, arrival) row
+    rows = lambda t: sorted(zip(t.src.tolist(), t.dst.tolist(),   # noqa: E731
+                                t.size.tolist(),
+                                t.arrival_slot.tolist()))
+    assert rows(m) == sorted(rows(a) + rows(b))
+    assert (np.diff(m.arrival_slot) >= 0).all()  # re-sorted by arrival
+    with pytest.raises(ValueError, match="slot sizes"):
+        merge_tables(a, shuffle(n_hosts=8, bytes_per_pair=3000,
+                                slot_bytes=512), workload="x", load=0.1)
+
+
+# ------------------------------------------------ SweepSpec integration ----
+
+def test_sweep_spec_accepts_workload_spec():
+    ws = WorkloadSpec(kind="hotspot", workload="W2", load=0.5,
+                      n_messages=120, n_hot=1)
+    cfg = SimConfig(protocol="homa", n_hosts=4, max_slots=2500,
+                    ring_cap=512)
+    spec = SweepSpec(workload=ws, seeds=(3, 11))
+    # each seed re-seeds the spec; results match sequential simulate
+    from repro.core import simulate
+    swe = run_sweep(cfg, spec)
+    for seed, r in zip((3, 11), swe):
+        tbl = ws.with_seed(seed).build(n_hosts=4, slot_bytes=256)
+        np.testing.assert_array_equal(
+            simulate(cfg, tbl).completion, r.completion)
+    with pytest.raises(ValueError, match="WorkloadSpec"):
+        SweepSpec(workload=ws, seeds=(0,), load=0.5)
+
+
+def test_bench_sweep_point_accepts_spec(tmp_path, monkeypatch):
+    """benchmarks.common.sim_sweep takes `spec` points directly, and the
+    optional key joins the cache identity only when present."""
+    from benchmarks import common
+    monkeypatch.setattr(common, "ART", tmp_path)
+    ws = dict(kind="shuffle", bytes_per_pair=2000, spread_slots=300)
+    out = common.sim_sweep([dict(spec=ws)], protocol="homa", n_hosts=6,
+                           max_slots=4000, ring_cap=512)
+    assert out[0]["completion_rate"] == 1.0
+    assert out[0]["params"]["spec"]["kind"] == "shuffle"
+    with pytest.raises(ValueError, match="exactly one form"):
+        common.sim_sweep([dict(spec=ws, workload="W1", load=0.5)],
+                         protocol="homa")
+    # a plain point's cache key must NOT contain the new optional axes
+    keyd, _ = common._point_key(workload="W1", protocol="homa", load=0.5,
+                                seed=0, overcommit=None, alloc=None,
+                                unsched_limit_bytes=None, params={})
+    assert "spec" not in keyd and "host" not in keyd
+
+
+# ------------------------------------------- FabricConfig.with_* moves -----
+
+def test_fabric_with_methods_match_legacy_helpers():
+    fab = FabricConfig(racks=4, oversub=2.0)
+    assert fab.with_lossy(up_loss=0.02) == lossy_fabric(fab, up_loss=0.02)
+    assert fab.with_uplink_failure(uplink=1, start=100, end=500) \
+        == uplink_failure(fab, uplink=1, start=100, end=500)
+    assert fab.with_tor_failure(rack=2, start=50, end=90) \
+        == tor_failure(fab, rack=2, start=50, end=90)
+    # chaining accumulates windows on one FaultConfig
+    chained = fab.with_lossy(up_loss=0.01) \
+        .with_uplink_failure(uplink=0, start=10, end=20) \
+        .with_uplink_failure(uplink=3, start=30, end=40)
+    assert chained.faults.up_loss == 0.01
+    assert chained.faults.link_fail == ((0, 10, 20), (3, 30, 40))
+    assert isinstance(chained.faults, FaultConfig)
+    with pytest.raises(ValueError, match="enabled fabric"):
+        FabricConfig().with_lossy(up_loss=0.01)
+    assert scenarios.__all__.count("lossy_fabric") == 1
