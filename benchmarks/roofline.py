@@ -112,11 +112,13 @@ def analyze_cell(arch: str, shape: str, mesh: str):
 def backend_compare(full: bool = False):
     """Simulator-side roofline cell: slots/sec of the per-slot
     arbitration hot path under each compute backend — reference vs
-    pallas-interpret everywhere, plus pallas-compiled when a TPU is
-    attached (interpret mode emulates the kernel in plain XLA, so only
-    the compiled row measures real kernel dispatch; DESIGN.md §6).
-    Registered as the ``backend_compare`` harness in benchmarks/run.py
-    and runnable standalone via ``--backend-cell``."""
+    pallas-interpret vs pallas_fused-interpret everywhere, plus the
+    compiled pallas/pallas_fused rows when a TPU is attached (interpret
+    mode emulates the kernels in plain XLA, so only the compiled rows
+    measure real kernel dispatch; DESIGN.md §6/§11 — the fused row is
+    where the one-launch-per-slot win shows). Registered as the
+    ``backend_compare`` harness in benchmarks/run.py and runnable
+    standalone via ``--backend-cell``."""
     import time
 
     import jax
@@ -129,10 +131,15 @@ def backend_compare(full: bool = False):
                         slot_bytes=256, seed=0)
     cells = [("reference", dict(backend="reference")),
              ("pallas-interpret", dict(backend="pallas",
-                                       pallas_interpret=True))]
+                                       pallas_interpret=True)),
+             ("pallas_fused-interpret", dict(backend="pallas_fused",
+                                             pallas_interpret=True))]
     if jax.default_backend() == "tpu":
         cells.append(("pallas-compiled", dict(backend="pallas",
                                               pallas_interpret=False)))
+        cells.append(("pallas_fused-compiled",
+                      dict(backend="pallas_fused",
+                           pallas_interpret=False)))
     rows = []
     for label, kw in cells:
         cfg = SimConfig(protocol="homa", n_hosts=16, ring_cap=1024,
@@ -157,6 +164,59 @@ def backend_compare(full: bool = False):
     if len({row["n_complete"] for row in rows}) != 1:
         raise RuntimeError(f"backend divergence in n_complete: {rows}")
     emit("backend_compare", rows)
+    return rows
+
+
+def fused_speed(full: bool = False):
+    """Staged-vs-fused micro cell, pinned by ``check_regression.py``:
+    one fabric-enabled homa run (all three fused stages live — downlink
+    drain, TOR uplink drain, SRPT grant top-K) on the staged pallas and
+    fused pallas_fused backends. Deterministic fields (completion count
+    and checksum, bit-match flag) gate EXACTLY; wall fields gate within
+    a generous ratio. Interpret mode on CPU measures trace/launch
+    overhead only — the HBM-round-trip win needs the compiled-TPU rows
+    of ``backend_compare``."""
+    import time
+
+    import numpy as np
+
+    import jax
+
+    from benchmarks.common import emit
+    from repro.core import SimConfig, FabricConfig, simulate, \
+        make_messages
+
+    n_msgs, max_slots = (1200, 12_000) if full else (300, 3_000)
+    tbl = make_messages("W2", n_hosts=16, load=0.7, n_messages=n_msgs,
+                        slot_bytes=256, seed=0)
+    fab = FabricConfig(racks=4, oversub=2.0, up_cap=256)
+    interpret = jax.default_backend() != "tpu"
+    results, walls = {}, {}
+    for backend in ("pallas", "pallas_fused"):
+        cfg = SimConfig(protocol="homa", n_hosts=16, ring_cap=512,
+                        max_slots=max_slots, fabric=fab, backend=backend,
+                        pallas_interpret=interpret)
+        simulate(cfg, tbl)                          # compile + warm caches
+        t0 = time.perf_counter()
+        results[backend] = simulate(cfg, tbl)
+        walls[backend] = time.perf_counter() - t0
+    bitmatch = bool(np.array_equal(results["pallas"].completion,
+                                   results["pallas_fused"].completion))
+    rows = [dict(
+        mode="interpret" if interpret else "compiled",
+        slots=max_slots,
+        n_complete=results["pallas_fused"].n_complete,
+        completion_sum=int(np.asarray(
+            results["pallas_fused"].completion, np.int64).sum()),
+        bitmatch=bitmatch,
+        staged_s=round(walls["pallas"], 3),
+        fused_s=round(walls["pallas_fused"], 3),
+        speedup=round(walls["pallas"] / walls["pallas_fused"], 3),
+    )]
+    if not bitmatch:
+        # a real error, not an assert: must survive `python -O`
+        raise RuntimeError(f"fused backend diverges from staged: {rows}")
+    emit("fused_speed", rows)
     return rows
 
 

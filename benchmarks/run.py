@@ -26,12 +26,13 @@ def main() -> None:
     from benchmarks import faults_figs as FL
     from benchmarks import hostmodel_figs as HM
     from benchmarks import telemetry_figs as TF
-    from benchmarks.roofline import backend_compare
+    from benchmarks.roofline import backend_compare, fused_speed
     from benchmarks.sweep_speed import sweep_speed
 
     harnesses = {
         "sweep_speed": sweep_speed,
         "backend_compare": backend_compare,
+        "fused_speed": fused_speed,
         "fabric_smoke": FF.fabric_smoke,
         "fabric_oversub": FF.fabric_oversub,
         "fig14_fabric_incast": FF.fig14_fabric_incast,

@@ -12,7 +12,11 @@ Two snapshots, each pinning all six protocols on the REFERENCE backend:
 
 ``--check`` regenerates in memory and fails (exit 1) on any drift
 instead of rewriting — run it before committing simulator changes that
-are supposed to be behaviour-preserving.
+are supposed to be behaviour-preserving. The check pass runs each
+snapshot on the reference backend AND on ``pallas_fused`` (interpret
+mode): the fused mega-kernel (DESIGN.md §11) must reproduce both
+committed goldens bit-for-bit, not just match the reference in tests.
+Goldens are always WRITTEN from the reference backend only.
 """
 from __future__ import annotations
 
@@ -38,14 +42,15 @@ def _table(meta):
                          slot_bytes=meta["slot_bytes"], seed=meta["seed"])
 
 
-def _snapshot(meta, fabric: FabricConfig | None) -> dict:
+def _snapshot(meta, fabric: FabricConfig | None,
+              backend: str = "reference") -> dict:
     tbl = _table(meta)
     out = {}
     for proto in PROTOS:
         cfg = SimConfig(protocol=proto, n_hosts=meta["n_hosts"],
                         max_slots=meta["max_slots"],
                         ring_cap=meta["ring_cap"], fabric=fabric,
-                        backend="reference")
+                        backend=backend)
         r = simulate(cfg, tbl)
         rec = {
             "completion": [int(x) for x in r.completion],
@@ -64,26 +69,29 @@ def _snapshot(meta, fabric: FabricConfig | None) -> dict:
 
 def main() -> int:
     check = "--check" in sys.argv[1:]
-    targets = {
-        "fabric_disabled.json": _snapshot(DISABLED_META, None),
-        "fabric_enabled.json": _snapshot(
-            ENABLED_META, FabricConfig(racks=ENABLED_META["racks"],
-                                       oversub=ENABLED_META["oversub"],
-                                       up_cap=ENABLED_META["up_cap"])),
-    }
+    fabric = FabricConfig(racks=ENABLED_META["racks"],
+                          oversub=ENABLED_META["oversub"],
+                          up_cap=ENABLED_META["up_cap"])
+    targets = {"fabric_disabled.json": None, "fabric_enabled.json": fabric}
+    # the goldens are authored by the reference backend; --check also
+    # replays them through the fused mega-kernel backend (DESIGN.md §11)
+    backends = ["reference", "pallas_fused"] if check else ["reference"]
     rc = 0
-    for name, snap in targets.items():
+    for name, fab in targets.items():
         fp = GOLDEN_DIR / name
-        text = json.dumps(snap)
-        if check:
-            if not fp.exists() or json.loads(fp.read_text()) != snap:
-                print(f"DRIFT: {fp}")
-                rc = 1
+        meta = ENABLED_META if fab is not None else DISABLED_META
+        for backend in backends:
+            snap = _snapshot(meta, fab, backend=backend)
+            if check:
+                if not fp.exists() or json.loads(fp.read_text()) != snap:
+                    print(f"DRIFT: {fp} [{backend}]")
+                    rc = 1
+                else:
+                    print(f"ok: {fp} [{backend}]")
             else:
-                print(f"ok: {fp}")
-        else:
-            fp.write_text(text)
-            print(f"wrote {fp} ({len(text)} bytes)")
+                text = json.dumps(snap)
+                fp.write_text(text)
+                print(f"wrote {fp} ({len(text)} bytes)")
     return rc
 
 

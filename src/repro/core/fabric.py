@@ -309,11 +309,19 @@ def route_chunks(cfg, st, S, cm, has, dsts, prio_chunk, now):
             "u_lost": st["u_lost"] + u_drop}
 
 
-def uplink_drain(cfg, st, S, now):
+def uplink_drain(cfg, st, S, now, pre=None):
     """Drain at most one chunk per TOR uplink (strict priority, FIFO
     within level) and forward it across its spine into the destination
     downlink ring, where it becomes eligible after ``spine_delay_slots``.
-    Returns updated state."""
+    Returns updated state.
+
+    ``pre`` is an optional pre-solved ``(slot_idx, any_e, prio)`` winner
+    triple from the ``pallas_fused`` backend, which arbitrates all of a
+    slot's stages in one kernel at slot start (DESIGN.md §11). The hoist
+    is bit-identical because this slot's ``route_chunks`` insertions
+    carry ``u_seq == now`` and ``leaf_delay_slots >= 1`` (enforced by
+    ``sim._fused_precompute``) keeps them ineligible until the next
+    slot — and ``ring_insert`` never overwrites a valid (winning) slot."""
     fab = cfg.fabric
     H = cfg.n_hosts
     M = S["size"].shape[0]
@@ -325,9 +333,12 @@ def uplink_drain(cfg, st, S, now):
         # a failed uplink black-holes its queue for the window: chunks
         # already buffered there neither drain nor get re-routed
         eligible = eligible & ~link_down_mask(cfg, now)[:, None]
-    slot_idx, any_e, _ = drain_select(st["u_prio"], st["u_seq"], eligible,
-                                      backend=cfg.backend,
-                                      interpret=cfg.pallas_interpret)
+    if pre is not None:
+        slot_idx, any_e, _ = pre
+    else:
+        slot_idx, any_e, _ = drain_select(st["u_prio"], st["u_seq"],
+                                          eligible, backend=cfg.backend,
+                                          interpret=cfg.pallas_interpret)
     uidx = (jnp.arange(U), slot_idx)
     msg = jnp.where(any_e, st["u_msg"][uidx], M)
     prio = st["u_prio"][uidx]

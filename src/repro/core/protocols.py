@@ -107,12 +107,25 @@ class FairShareSender(SenderPolicy):
 class ReceiverPolicy:
     """Grant issue + scheduled-priority assignment + overcommit degree."""
 
-    def grants(self, cfg, st, S, now, n_sched):
+    def grants(self, cfg, st, S, now, n_sched, topk=None):
         """Returns ``(grant_r, sched_prio, active, withheld)``:
         (M,) granted slots, (M,) scheduled priority, (M,) bool mask of
         messages the receivers actively schedule, and (H,) bool — hosts
-        with known-but-ungranted traffic (wasted-bandwidth accounting)."""
+        with known-but-ungranted traffic (wasted-bandwidth accounting).
+
+        ``topk`` is the precomputed ``(vals, idx)`` answer to this
+        policy's :meth:`grant_problem` — supplied by the ``pallas_fused``
+        backend, which solves it inside the fused per-slot kernel
+        (DESIGN.md §11). Policies without a grant problem ignore it."""
         raise NotImplementedError
+
+    def grant_problem(self, cfg, st, S, now, n_sched):
+        """The top-K selection this policy would issue this slot, as
+        ``(keys (H, M), K)`` for the fused kernel — or ``None`` if the
+        policy selects no grant set (window receivers). Must read exactly
+        the state :meth:`grants` reads, so solving it at slot start is
+        bit-identical to solving it inside :meth:`grants`."""
+        return None
 
     def resend(self, cfg, st, S, now, known, quiet):
         """Receiver-side loss detection (paper §3.7): (M,) bool mask of
@@ -136,27 +149,46 @@ def window_grants(cfg, st, S, gate):
     return grant_r, jnp.zeros_like(st["sched_prio"]), gate, no_withheld
 
 
-def topk_srpt_grants(cfg, st, S, eligible, K, n_sched):
+def srpt_grant_matrix(cfg, st, S, eligible, K):
+    """The receiver-side SRPT selection problem as a dense key matrix:
+    ``(keys (H, M), K)`` where row h holds the grant key of every message
+    destined to host h (0 = ineligible) and K is clamped to M. This is
+    the ``(mat, K)`` that :func:`topk_srpt_grants` selects over — split
+    out so the ``pallas_fused`` backend can pose the identical problem
+    to the fused kernel at slot start (``ReceiverPolicy.grant_problem``).
+
+    The key orders by (remaining, msg): smaller remaining wins, ties
+    break toward the SMALLEST msg id. A stable active set is what gives
+    SRPT its run-to-completion behaviour — an unstable tie-break churns
+    the active message and leaks grants to every tied message
+    (catastrophic under incast, where all messages are the same size)."""
+    size, dst_oh = S["size"], S["dst_onehot"]
+    remaining = jnp.maximum(size - st["recv"], 0)
+    K = min(K, size.shape[0])        # can't select more than M messages
+    keyval = ((jnp.int32(1 << 17) - jnp.minimum(remaining, (1 << 17) - 1))
+              << MSG_BITS) | (MSG_MOD - 1 - S["msg_ids"])
+    mat = jnp.where(dst_oh & eligible[None, :], keyval[None, :], 0)  # (H, M)
+    return mat, K
+
+
+def topk_srpt_grants(cfg, st, S, eligible, K, n_sched, topk=None):
     """Shared helper: each receiver grants its top-K SRPT messages one RTT
     ahead and assigns scheduled priorities lowest-levels-first (paper
     §3.4/Fig. 5), shortest message on the highest scheduled level. The
     top-K selection is backend-dispatched (``SimConfig.backend``,
     DESIGN.md §6): the pallas path runs the ``srpt_topk`` kernel, whose
     index output IS the winning message id (columns of ``mat``), so no
-    key-decoding or re-matching scan is needed on either backend."""
+    key-decoding or re-matching scan is needed on either backend. The
+    ``pallas_fused`` backend passes the selection in pre-solved
+    (``topk=(vals, idx)``, from the fused slot kernel — DESIGN.md §11)."""
     size, dst_oh = S["size"], S["dst_onehot"]
-    remaining = jnp.maximum(size - st["recv"], 0)
-    K = min(K, size.shape[0])        # can't select more than M messages
-    # key orders by (remaining, msg): smaller remaining wins, ties break
-    # toward the SMALLEST msg id. A stable active set is what gives SRPT
-    # its run-to-completion behaviour — an unstable tie-break churns the
-    # active message and leaks grants to every tied message
-    # (catastrophic under incast, where all messages are the same size).
-    keyval = ((jnp.int32(1 << 17) - jnp.minimum(remaining, (1 << 17) - 1))
-              << MSG_BITS) | (MSG_MOD - 1 - S["msg_ids"])
-    mat = jnp.where(dst_oh & eligible[None, :], keyval[None, :], 0)  # (H, M)
-    vals, idx = backend_topk(mat, K, backend=cfg.backend,
-                             interpret=cfg.pallas_interpret)         # (H, K)
+    if topk is None:
+        mat, K = srpt_grant_matrix(cfg, st, S, eligible, K)
+        vals, idx = backend_topk(mat, K, backend=cfg.backend,
+                                 interpret=cfg.pallas_interpret)     # (H, K)
+    else:
+        vals, idx = topk
+        K = vals.shape[1]
     valid = vals > 0
     msgs = jnp.where(valid, idx, MSG_MOD)                            # sentinel
     n_active = valid.sum(axis=1)                                     # (H,)
@@ -194,7 +226,7 @@ class WindowReceiver(ReceiverPolicy):
     (``blind=True``) incomplete message; no receiver-side scheduling."""
     blind: bool = False
 
-    def grants(self, cfg, st, S, now, n_sched):
+    def grants(self, cfg, st, S, now, n_sched, topk=None):
         if self.blind:
             gate = (S["arrival"] <= now) & (st["completion"] < 0)
         else:
@@ -212,15 +244,25 @@ class OvercommitSrptReceiver(ReceiverPolicy):
     max_k: int | None = None
     stall_aware: bool = False
 
-    def grants(self, cfg, st, S, now, n_sched):
+    def _k(self, cfg, n_sched):
         if self.max_k is not None:
-            K = self.max_k
-        else:
-            K = cfg.overcommit or max(n_sched, 1)
+            return self.max_k
+        return cfg.overcommit or max(n_sched, 1)
+
+    def _eligible(self, cfg, st, now):
         eligible = (st["recv"] > 0) & (st["completion"] < 0)
         if self.stall_aware:
             eligible = eligible & (st["stall_until"] <= now)
-        return topk_srpt_grants(cfg, st, S, eligible, K, n_sched)
+        return eligible
+
+    def grants(self, cfg, st, S, now, n_sched, topk=None):
+        eligible = self._eligible(cfg, st, now)
+        return topk_srpt_grants(cfg, st, S, eligible,
+                                self._k(cfg, n_sched), n_sched, topk=topk)
+
+    def grant_problem(self, cfg, st, S, now, n_sched):
+        return srpt_grant_matrix(cfg, st, S, self._eligible(cfg, st, now),
+                                 self._k(cfg, n_sched))
 
     def resend(self, cfg, st, S, now, known, quiet):
         # Homa's receiver timeout (paper §3.7): a receiver that actively

@@ -69,7 +69,8 @@ from repro.core.fabric import (FabricConfig, spine_hash, ring_insert,
                                drain_select, init_fabric_state,
                                route_chunks, uplink_drain)
 from repro.core.faults import (FaultConfig, init_fault_state,
-                               apply_recovery, host_down_mask)
+                               apply_recovery, host_down_mask,
+                               link_down_mask)
 from repro.core.hostmodel import HostConfig, as_host_config, get_host_model
 from repro.core import telemetry
 from repro.core.telemetry import TraceConfig, SimTrace
@@ -102,8 +103,10 @@ class SimConfig:
     # — bit-identical to the pre-telemetry simulator
     trace: TraceConfig | None = None
     # compute backend for the per-slot arbitration hot path (DESIGN.md §6):
-    # "reference" (pure-jnp) | "pallas" (kernels.arbiter); None resolves
-    # from $SIM_BACKEND. Both backends are bit-identical by contract.
+    # "reference" (pure-jnp) | "pallas" (kernels.arbiter, one kernel per
+    # stage) | "pallas_fused" (all of a slot's arbitration in ONE kernel
+    # launch — DESIGN.md §11); None resolves from $SIM_BACKEND. All
+    # backends are bit-identical by contract.
     backend: str | None = None
     # pallas interpret mode; None auto-selects (interpreted off-TPU,
     # $SIM_PALLAS_INTERPRET overrides). Resolved to a concrete bool here
@@ -135,6 +138,16 @@ class SimConfig:
         """True iff the leaf-spine tier is modeled (``FabricConfig(None)``
         and ``fabric=None`` both mean the single-switch fast path)."""
         return self.fabric is not None and self.fabric.enabled
+
+    @property
+    def fused_on(self) -> bool:
+        """True iff the fused per-slot mega-kernel backend is selected
+        (DESIGN.md §11). Stages whose hoist-to-slot-start precondition a
+        config doesn't meet (a zero ``net_delay_slots`` / ``leaf_delay_
+        slots`` makes same-slot insertions immediately eligible) fall
+        back to the staged pallas kernels per stage — still
+        bit-identical, never wrong."""
+        return self.backend == "pallas_fused"
 
     @property
     def faults_on(self) -> bool:
@@ -298,6 +311,76 @@ def _sender_select(cfg: SimConfig, proto: Protocol, st, S, now):
     return chosen, has
 
 
+def _fused_precompute(cfg: SimConfig, proto: Protocol, S, n_sched: int,
+                      st, now):
+    """``pallas_fused`` backend (DESIGN.md §11): solve ALL of this slot's
+    arbitration — downlink drain, TOR uplink drain, SRPT grant top-K —
+    in one kernel launch at slot start, before the stages that normally
+    interleave with them. Returns ``(st, grant_st, fused)``:
+
+      st        slot state, with the host RX delivery already applied
+                when the downlink stage is fused (its room gate is a
+                kernel input; ``rx_deliver`` touches only RX-ring state
+                and ``recv``, which stages 1–3 never read)
+      grant_st  the state the receiver policy must see — slot-start
+                ``recv`` (grants run before RX delivery in the staged
+                order), everything else current
+      fused     per-stage pre-solved answers: ``"down"``/``"up"`` ->
+                the ``drain_select`` triple, ``"topk"`` -> ``(vals,
+                idx)`` for ``ReceiverPolicy.grants``
+
+    Hoisting the drains is bit-exact because every chunk inserted later
+    in the slot is ineligible until the next slot (``net_delay_slots >=
+    1`` / ``leaf_delay_slots >= 1`` / validated ``spine_delay_slots >=
+    1``) and ``ring_insert`` only ever writes invalid slots, so the
+    winners and their payloads are unchanged. A stage whose delay
+    precondition fails is simply not fused — the staged kernel runs at
+    its usual point instead."""
+    from repro.kernels.arbiter import dispatch
+    fuse_down = cfg.net_delay_slots >= 1
+    fuse_up = cfg.fabric_on and cfg.fabric.leaf_delay_slots >= 1
+    prob = proto.receiver.grant_problem(cfg, st, S, now, n_sched)
+    grant_st = st
+    down = up = None
+    if fuse_down:
+        if cfg.host_rx_on:
+            recv_pre = st["recv"]
+            st = cfg.host_model.rx_deliver(cfg, st, S, now)
+            room = cfg.host_model.rx_room(cfg, st)
+            grant_st = {**st, "recv": recv_pre}
+        eligible = st["r_valid"] & (st["r_seq"] + cfg.net_delay_slots
+                                    <= now)
+        if cfg.faults_on and cfg.fabric.faults.tor_fail:
+            eligible = eligible & ~host_down_mask(cfg, now)[:, None]
+        if cfg.host_rx_on:
+            st = {**st, "h_rx_stall": st["h_rx_stall"]
+                  + (eligible.any(axis=1) & ~room).astype(I32)}
+            eligible = eligible & room[:, None]
+        down = (st["r_prio"], st["r_seq"], eligible)
+    if fuse_up:
+        fab = cfg.fabric
+        u_elig = st["u_valid"] & (st["u_seq"] + fab.leaf_delay_slots
+                                  <= now)
+        fl = fab.faults
+        if fl is not None and (fl.link_fail or fl.tor_fail):
+            u_elig = u_elig & ~link_down_mask(cfg, now)[:, None]
+        up = (st["u_prio"], st["u_seq"], u_elig)
+    if down is None and up is None and prob is None:
+        return st, grant_st, {}
+    out = dispatch.fused_slot(down=down, up=up, topk=prob,
+                              interpret=cfg.pallas_interpret)
+    fused = {}
+    if "down" in out:
+        bp, bi = out["down"]
+        fused["down"] = (bi, bp < BIG, bp)
+    if "up" in out:
+        bp, bi = out["up"]
+        fused["up"] = (bi, bp < BIG, bp)
+    if "topk" in out:
+        fused["topk"] = out["topk"]
+    return st, grant_st, fused
+
+
 def step_fn(cfg: SimConfig, proto: Protocol, S, n_sched: int, st, now):
     """One link-time slot: policy-agnostic orchestration of receivers,
     uplinks, the network, and the priority-queue downlinks."""
@@ -307,9 +390,16 @@ def step_fn(cfg: SimConfig, proto: Protocol, S, n_sched: int, st, now):
     # pre-step references for telemetry event deltas (DESIGN.md §8)
     tr_prev = telemetry.snapshot(cfg, st) if cfg.trace_on else None
 
+    # ---- 0. fused backend: one kernel for ALL of this slot's
+    # arbitration (DESIGN.md §11); {} when nothing is fusable
+    grant_st, fused = st, {}
+    if cfg.fused_on:
+        st, grant_st, fused = _fused_precompute(cfg, proto, S, n_sched,
+                                                st, now)
+
     # ---- 1. receiver policy (current state), store into delay history
     grant_r, sched_prio, active, withheld = proto.receiver.grants(
-        cfg, st, S, now, n_sched)
+        cfg, grant_st, S, now, n_sched, topk=fused.get("topk"))
     st = {**st, "grant_r": grant_r, "sched_prio": sched_prio}
     hist_grant = st["hist_grant"].at[now % Dg].set(grant_r)
     hist_prio = st["hist_prio"].at[now % Dg].set(sched_prio)
@@ -356,7 +446,7 @@ def step_fn(cfg: SimConfig, proto: Protocol, S, n_sched: int, st, now):
               "r_valid": r_valid, "lost": st["lost"] + n_drop}
     else:
         st = route_chunks(cfg, st, S, cm, has, dsts, prio_chunk, now)
-        st = uplink_drain(cfg, st, S, now)
+        st = uplink_drain(cfg, st, S, now, pre=fused.get("up"))
 
     # ---- 4. downlink drain: strict priority, FIFO within level
     # (backend-dispatched: cfg.backend="pallas" runs the priority_arbiter
@@ -367,20 +457,29 @@ def step_fn(cfg: SimConfig, proto: Protocol, S, n_sched: int, st, now):
         # buffered chunks survive and resume draining when it lifts
         eligible = eligible & ~host_down_mask(cfg, now)[:, None]
     q_eligible = eligible                       # backlog incl. stalled rows
-    if cfg.host_rx_on:
-        # host/NIC RX stage (DESIGN.md §10): finish service on ring
-        # entries whose CPU time elapsed (feeds recv -> grants AND
-        # completions), then gate the downlink on RX-ring room — a full
-        # ring backpressures the network (chunks stay queued, not lost)
-        hm = cfg.host_model
-        st = hm.rx_deliver(cfg, st, S, now)
-        room = hm.rx_room(cfg, st)
-        st = {**st, "h_rx_stall": st["h_rx_stall"]
-              + (eligible.any(axis=1) & ~room).astype(I32)}
-        eligible = eligible & room[:, None]
-    slot_idx, any_elig, pmin = drain_select(st["r_prio"], st["r_seq"],
-                                            eligible, backend=cfg.backend,
-                                            interpret=cfg.pallas_interpret)
+    if "down" in fused:
+        # winner pre-solved at slot start by the fused kernel (incl. the
+        # RX delivery / room gate — _fused_precompute); this slot's
+        # insertions carry seq == now and can't be eligible yet, so the
+        # hoisted selection is bit-identical (DESIGN.md §11). q_eligible
+        # above is provably the kernel's pre-room eligibility input.
+        slot_idx, any_elig, pmin = fused["down"]
+    else:
+        if cfg.host_rx_on:
+            # host/NIC RX stage (DESIGN.md §10): finish service on ring
+            # entries whose CPU time elapsed (feeds recv -> grants AND
+            # completions), then gate the downlink on RX-ring room — a
+            # full ring backpressures the network (chunks stay queued,
+            # not lost)
+            hm = cfg.host_model
+            st = hm.rx_deliver(cfg, st, S, now)
+            room = hm.rx_room(cfg, st)
+            st = {**st, "h_rx_stall": st["h_rx_stall"]
+                  + (eligible.any(axis=1) & ~room).astype(I32)}
+            eligible = eligible & room[:, None]
+        slot_idx, any_elig, pmin = drain_select(
+            st["r_prio"], st["r_seq"], eligible, backend=cfg.backend,
+            interpret=cfg.pallas_interpret)
     hidx = (jnp.arange(H), slot_idx)
     drained_msg = jnp.where(any_elig, st["r_msg"][hidx], M)
     if cfg.host_rx_on:

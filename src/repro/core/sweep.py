@@ -32,6 +32,15 @@ sees exactly the slot numbers the flat scan would — the chunked program
 is the same step sequence and therefore bit-identical. Streaming
 accumulators ride the outer carry and fold once per chunk.
 
+**Fused backend under vmap.** With ``backend="pallas_fused"``
+(DESIGN.md §11) the vmap over the run axis does NOT un-fuse the
+per-slot mega-kernel into per-lane calls: the fused entry point
+carries a ``jax.custom_batching.custom_vmap`` rule that rewrites the
+batched call into a single ``grid=(B,)`` kernel — one launch per slot
+for the whole run batch, on both the fast path and this chunked path.
+Nothing in this module special-cases it; the rule lives in
+``kernels.arbiter.fused``.
+
 **Streaming stats.** With ``streaming`` on, a run's slowdowns are binned
 into a fixed log-spaced histogram *inside* the compiled program (size
 bucket x slowdown bucket), and only O(buckets) scalars per run are

@@ -7,24 +7,31 @@ compute backend:
       winner per row — the math of ``fabric.ring_drain_select``.
   ``topk(keys, K, backend=...)``                per-row top-K (values AND
       source columns) — the receiver's SRPT grant-set selection.
+  ``fused_slot(down=..., up=..., topk=...)``    all of a slot's stages in
+      ONE kernel launch — the ``pallas_fused`` backend's entry point
+      (DESIGN.md §11), called from ``sim._fused_precompute``.
 
 ``backend="reference"`` runs the pure-jnp oracles (``ref.py``);
 ``backend="pallas"`` runs the Pallas TPU kernels (``kernel.py``) through
-the padded wrappers below. Both are bit-identical by contract — the
-golden-snapshot tests in ``tests/test_backend.py`` and the property
-tests in ``tests/test_kernels.py`` enforce it — so ``SimConfig.backend``
-is a pure performance knob.
+the padded wrappers below; ``backend="pallas_fused"`` additionally fuses
+the three per-slot stages into one launch (``fused.py``) — the staged
+primitives below still serve its non-fusable call sites. All backends
+are bit-identical by contract — the golden-snapshot tests in
+``tests/test_backend.py``, the differential fuzz harness in
+``tests/test_differential.py``, and the property tests in
+``tests/test_kernels.py`` enforce it — so ``SimConfig.backend`` is a
+pure performance knob.
 
-This module also owns the padding/block-size heuristics that used to be
-duplicated per call site in ``ops.py``: rows pad to the 8-sublane
-multiple, columns pad to the 128-lane multiple (the TPU tile for int32),
-and the block size is the largest preferred power of two dividing the
-padded dimension. Padding values are chosen so padded entries can never
-win (``BIG`` priority / ``False`` eligibility / the ``NEG`` key
-sentinel — NOT zero, which is a legitimate key value).
+This module also owns the padding/block-size heuristics, shared by every
+wrapper through :func:`pad_tiles`: rows pad to the 8-sublane multiple,
+columns pad to the 128-lane multiple (the TPU tile for int32), and the
+block size is the largest preferred power of two dividing the padded
+dimension. Padding values are chosen so padded entries can never win
+(``BIG`` priority / ``False`` eligibility / the ``NEG`` key sentinel —
+NOT zero, which is a legitimate key value).
 
 Interpret-mode selection (``resolve_interpret``): Pallas TPU kernels
-only compile on a TPU, so off-TPU the pallas backend auto-selects
+only compile on a TPU, so off-TPU the pallas backends auto-select
 ``interpret=True`` — the kernel is traced into plain XLA ops and runs
 (and is tested) everywhere. ``SIM_PALLAS_INTERPRET=0|1`` overrides, so
 a TPU host can still benchmark the interpreted path.
@@ -40,10 +47,16 @@ import jax.numpy as jnp
 from repro.kernels.arbiter.kernel import (priority_arbiter, srpt_topk,
                                           BIG, NEG)
 from repro.kernels.arbiter.ref import priority_arbiter_ref, srpt_topk_ref
+from repro.kernels.arbiter import fused as fused_mod
 
-BACKENDS = ("reference", "pallas")
+BACKENDS = ("reference", "pallas", "pallas_fused")
 _ROW_UNIT = 8          # TPU sublane multiple for int32 blocks
 _COL_UNIT = 128        # TPU lane multiple
+
+# operand-size ceiling for the no-grid fused kernel (whole arrays live
+# in VMEM simultaneously); beyond it dispatch falls back to the staged
+# per-stage kernels — still pallas, still bit-identical
+FUSED_VMEM_LIMIT_BYTES = 8 * 2 ** 20
 
 
 def resolve_backend(name: str | None) -> str:
@@ -93,6 +106,34 @@ def _pad2(x, rows: int, cols: int, fill):
     return jnp.pad(x, ((0, rows - H), (0, cols - C)), constant_values=fill)
 
 
+def pad_tiles(arrs, fills, *, col_pref: int = 256):
+    """THE shared pad-and-tile policy (used by ``arbitrate``, ``topk``
+    and the fused entry point): pad each same-shape 2-D array in ``arrs``
+    to the TPU tile — rows to the 8-sublane multiple, columns to the
+    128-lane multiple — with its own can't-win ``fill``, and pick block
+    sizes (rows block 8; columns the largest power-of-two multiple of
+    128 dividing the padded width, capped at ``col_pref``).
+
+    Returns ``(padded_arrays, (block_h, block_c))``."""
+    H, C = arrs[0].shape
+    Hp = _padded_dim(H, _ROW_UNIT)
+    Cp = _padded_dim(C, _COL_UNIT)
+    bh = _block(Hp, _ROW_UNIT, _ROW_UNIT)
+    bc = _block(Cp, col_pref, _COL_UNIT)
+    return tuple(_pad2(a, Hp, Cp, f)
+                 for a, f in zip(arrs, fills)), (bh, bc)
+
+
+def pad_min_cols(keys, K: int):
+    """Top-K inputs narrower than K widen to K columns with the ``NEG``
+    sentinel — never zero: 0 is a legitimate (ineligible) key value and
+    must still outrank padding so indices stay in-bounds."""
+    H, M = keys.shape
+    if M < K:
+        keys = jnp.pad(keys, ((0, 0), (0, K - M)), constant_values=NEG)
+    return keys
+
+
 # ---------------------------------------------------- pallas wrappers ------
 
 @partial(jax.jit, static_argnames=("interpret",))
@@ -100,39 +141,91 @@ def pallas_arbitrate(prio, seq, elig, *, interpret: bool = False):
     """Padded ``priority_arbiter`` call: returns ``(best_prio, best_idx)``
     per row, ``best_prio == BIG`` (and ``best_idx == 0``) if the row has
     no eligible entry — exactly ``ref.priority_arbiter_ref``."""
-    H, cap = prio.shape
-    Hp = _padded_dim(H, _ROW_UNIT)
-    capp = _padded_dim(cap, _COL_UNIT)
-    bh = _block(Hp, _ROW_UNIT, _ROW_UNIT)
-    bc = _block(capp, 256, _COL_UNIT)
-    pp = _pad2(prio, Hp, capp, BIG)
-    sp = _pad2(seq, Hp, capp, BIG)
-    ep = _pad2(elig, Hp, capp, False)
+    H = prio.shape[0]
+    (pp, sp, ep), (bh, bc) = pad_tiles((prio, seq, elig),
+                                       (BIG, BIG, False), col_pref=256)
     bp, bi = priority_arbiter(pp, sp, ep, block_h=bh, block_c=bc,
                               interpret=interpret)
     return bp[:H], bi[:H]
+
+
+def _topk_normalize(vals, idx):
+    """Raw kernel top-K -> caller convention: descending keys clamped at
+    0, columns -1 where fewer than K positive keys exist."""
+    return jnp.maximum(vals, 0), jnp.where(vals > 0, idx, -1)
 
 
 @partial(jax.jit, static_argnames=("K", "interpret"))
 def pallas_topk(keys, K: int, *, interpret: bool = False):
     """Padded ``srpt_topk`` call: returns ``(vals, idx)`` — the K largest
     keys per row (descending, clamped at 0) and their source columns
-    (-1 where fewer than K positive keys exist). Columns pad with the
-    ``NEG`` sentinel, never zero: 0 is a legitimate (ineligible) key
-    value and must still outrank padding so indices stay in-bounds."""
-    H, M = keys.shape
-    if M < K:
-        keys = jnp.pad(keys, ((0, 0), (0, K - M)), constant_values=NEG)
-        M = K
-    Hp = _padded_dim(H, _ROW_UNIT)
-    Mp = _padded_dim(M, _COL_UNIT)
-    bh = _block(Hp, _ROW_UNIT, _ROW_UNIT)
-    bm = _block(Mp, 512, _COL_UNIT)
-    kp = _pad2(keys, Hp, Mp, NEG)
+    (-1 where fewer than K positive keys exist)."""
+    H = keys.shape[0]
+    keys = pad_min_cols(keys, K)
+    (kp,), (bh, bm) = pad_tiles((keys,), (NEG,), col_pref=512)
     vals, idx = srpt_topk(kp, K, block_h=bh, block_m=bm,
                           interpret=interpret)
-    vals, idx = vals[:H], idx[:H]
-    return jnp.maximum(vals, 0), jnp.where(vals > 0, idx, -1)
+    return _topk_normalize(vals[:H], idx[:H])
+
+
+def fused_slot(down=None, up=None, topk=None, *,
+               interpret: bool | None = None):
+    """The ``pallas_fused`` backend's per-slot entry point: pad every
+    present stage with the shared :func:`pad_tiles` policy and issue ONE
+    ``fused.fused_slot`` kernel launch (DESIGN.md §11).
+
+      down / up   ``(prio (H, cap), seq, elig)`` — downlink / TOR-uplink
+                  drain problems (either may be ``None``)
+      topk        ``(keys (H2, M), K)`` — the SRPT grant-set problem
+
+    Returns a dict with a key per present stage: ``"down"``/``"up"`` ->
+    ``(best_prio (H,), best_idx (H,))`` exactly as :func:`arbitrate`;
+    ``"topk"`` -> normalized ``(vals (H2, K), idx (H2, K))`` exactly as
+    :func:`topk`. Operands too large for whole-array VMEM blocks
+    (``FUSED_VMEM_LIMIT_BYTES``) fall back to the staged per-stage
+    kernels — bit-identical either way."""
+    interpret = resolve_interpret(interpret)
+    d_pad = u_pad = k_pad = None
+    K = 0
+    nbytes = 0
+    if down is not None:
+        d_pad, _ = pad_tiles(down, (BIG, BIG, False))
+        nbytes += sum(4 * a.size for a in d_pad)
+    if up is not None:
+        u_pad, _ = pad_tiles(up, (BIG, BIG, False))
+        nbytes += sum(4 * a.size for a in u_pad)
+    if topk is not None:
+        keys, K = topk
+        keys = pad_min_cols(keys, K)
+        (kp,), _ = pad_tiles((keys,), (NEG,))
+        k_pad = kp
+        nbytes += 4 * kp.size + 8 * kp.shape[0] * K
+    if nbytes > FUSED_VMEM_LIMIT_BYTES:
+        out = {}
+        if down is not None:
+            out["down"] = pallas_arbitrate(*down, interpret=interpret)
+        if up is not None:
+            out["up"] = pallas_arbitrate(*up, interpret=interpret)
+        if topk is not None:
+            out["topk"] = pallas_topk(topk[0], topk[1],
+                                      interpret=interpret)
+        return out
+    raw = fused_mod.fused_slot(down=d_pad, up=u_pad, keys=k_pad, K=K,
+                               interpret=interpret)
+    raw = list(raw)
+    out = {}
+    if down is not None:
+        H = down[0].shape[0]
+        out["down"] = (raw[0][:H], raw[1][:H])
+        raw = raw[2:]
+    if up is not None:
+        U = up[0].shape[0]
+        out["up"] = (raw[0][:U], raw[1][:U])
+        raw = raw[2:]
+    if topk is not None:
+        H2 = topk[0].shape[0]
+        out["topk"] = _topk_normalize(raw[0][:H2], raw[1][:H2])
+    return out
 
 
 # -------------------------------------------------------- dispatchers ------
@@ -141,7 +234,9 @@ def arbitrate(prio, seq, elig, *, backend: str = "reference",
               interpret: bool | None = None):
     """Strict-priority, FIFO-within-level winner per row on the chosen
     backend. Returns ``(best_prio (H,), best_idx (H,))``; rows with no
-    eligible entry return ``(BIG, 0)``. Bit-identical across backends."""
+    eligible entry return ``(BIG, 0)``. Bit-identical across backends.
+    ``pallas_fused`` routes here for call sites outside the fused slot
+    (they run the staged kernel)."""
     if resolve_backend(backend) == "reference":
         return priority_arbiter_ref(prio, seq, elig)
     return pallas_arbitrate(prio, seq, elig,
@@ -160,4 +255,5 @@ def topk(keys, K: int, *, backend: str = "reference",
 
 
 __all__ = ["BACKENDS", "resolve_backend", "resolve_interpret",
-           "arbitrate", "topk", "pallas_arbitrate", "pallas_topk"]
+           "arbitrate", "topk", "fused_slot", "pad_tiles", "pad_min_cols",
+           "pallas_arbitrate", "pallas_topk", "FUSED_VMEM_LIMIT_BYTES"]

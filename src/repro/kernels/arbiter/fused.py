@@ -1,0 +1,248 @@
+"""Fused per-slot arbitration mega-kernel (DESIGN.md §11).
+
+One ``pallas_call`` per simulated slot covering all three arbitration
+stages that ``dispatch.py`` previously issued as separate kernels:
+
+  downlink drain   lexicographic (prio, seq) argmin over the receiver
+                   rings — the math of ``kernel.priority_arbiter``
+  uplink drain     the same argmin over the TOR uplink rings (leaf-spine
+                   fabrics only)
+  SRPT grant set   per-receiver top-K keys + source columns — the math
+                   of ``kernel.srpt_topk``
+
+The three stages are data-independent within a slot once hoisted to slot
+start (the sim enforces the delay preconditions that make the hoist
+bit-exact — see ``sim._fused_precompute`` and DESIGN.md §11), so the
+kernel simply runs them back to back on whole-array VMEM blocks: at
+simulator scale every operand fits VMEM comfortably, and fusing removes
+two of the three HBM round-trips plus two kernel launches per slot.
+
+Each stage's math is the single-block execution of the corresponding
+staged kernel — same masked reductions, same first-occurrence tie
+breaks, same ``BIG``/``NEG`` sentinels — which is why fused == staged is
+bit-exact and not merely close (the reductions are reordered across
+*blocks*, never within a row).
+
+Two entry points:
+
+  ``fused_slot(...)``        single slot; inputs are pre-padded 2-D tiles
+  ``fused_slot_batch(...)``  leading batch axis (one sweep-run per grid
+                             program): ``grid=(B,)`` so a vmapped sweep
+                             issues ONE kernel launch per slot for the
+                             whole run batch instead of B
+
+``fused_slot`` carries a ``jax.custom_batching.custom_vmap`` rule that
+rewrites ``vmap(fused_slot)`` into ``fused_slot_batch`` — the chunked
+sweep path (``repro.core.sweep``) gets the batched launch for free, with
+unbatched operands broadcast. Padding/shape policy lives in
+``dispatch.fused_slot``; these entry points require exact tile multiples.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.arbiter.kernel import BIG, NEG
+
+
+# ----------------------------------------------------- stage primitives ----
+
+def _lex_argmin(prio, seq, elig):
+    """Single-block ``_arb_kernel`` math: strict-priority-then-FIFO winner
+    per row. Returns ``(best_prio, best_idx)``; ``(BIG, 0)`` when the row
+    has no eligible entry."""
+    p = jnp.where(elig, prio, BIG)
+    s = jnp.where(elig, seq, BIG)
+    pmin = jnp.min(p, axis=1)
+    s_cand = jnp.where(p == pmin[:, None], s, BIG)
+    idx = jnp.argmin(s_cand, axis=1).astype(jnp.int32)
+    return pmin, idx
+
+
+def _topk_rounds(keys, K: int):
+    """Single-block ``_topk_kernel`` math: K rounds of masked max with
+    first-occurrence extraction. The running-tops prefix sits before the
+    key columns exactly as in the staged kernel's concat, so tie-breaks
+    (lowest global column — ``lax.top_k`` stability) are identical."""
+    Hb, Mb = keys.shape
+    col = jax.lax.broadcasted_iota(jnp.int32, (Hb, Mb), 1)
+    cand_v = jnp.concatenate(
+        [jnp.full((Hb, K), NEG, jnp.int32), keys], axis=1)
+    cand_i = jnp.concatenate(
+        [jnp.full((Hb, K), -1, jnp.int32), col], axis=1)
+    tops_v = jnp.full((Hb, K), NEG, jnp.int32)
+    tops_i = jnp.full((Hb, K), -1, jnp.int32)
+    for r in range(K):
+        m = jnp.max(cand_v, axis=1)
+        is_m = cand_v == m[:, None]
+        first = is_m & (jnp.cumsum(is_m.astype(jnp.int32), axis=1) == 1)
+        tops_v = tops_v.at[:, r].set(m)
+        tops_i = tops_i.at[:, r].set(
+            jnp.max(jnp.where(first, cand_i, -1), axis=1))
+        cand_v = jnp.where(first, jnp.int32(NEG), cand_v)
+        cand_i = jnp.where(first, jnp.int32(-1), cand_i)
+    return tops_v, tops_i
+
+
+# ------------------------------------------------------------ the kernel ---
+
+def _fused_kernel(*refs, K: int, has_down: bool, has_up: bool,
+                  has_topk: bool, batched: bool):
+    """(*ins, *outs) refs in stage order. ``batched`` refs carry a
+    leading length-1 block axis (one grid program per batch element)."""
+    rd = (lambda r: r[0]) if batched else (lambda r: r[...])
+
+    def wr(r, v):
+        if batched:
+            r[0] = v
+        else:
+            r[...] = v
+
+    n_in = 3 * has_down + 3 * has_up + has_topk
+    ins, outs = refs[:n_in], refs[n_in:]
+    i = o = 0
+    if has_down:
+        bp, bi = _lex_argmin(rd(ins[i]), rd(ins[i + 1]), rd(ins[i + 2]))
+        wr(outs[o], bp)
+        wr(outs[o + 1], bi)
+        i += 3
+        o += 2
+    if has_up:
+        bp, bi = _lex_argmin(rd(ins[i]), rd(ins[i + 1]), rd(ins[i + 2]))
+        wr(outs[o], bp)
+        wr(outs[o + 1], bi)
+        i += 3
+        o += 2
+    if has_topk:
+        tv, ti = _topk_rounds(rd(ins[i]), K)
+        wr(outs[o], tv)
+        wr(outs[o + 1], ti)
+
+
+def _out_shapes(arrays, K: int, has_down: bool, has_up: bool,
+                has_topk: bool):
+    """Logical (unbatched) output shapes in stage order."""
+    shapes = []
+    i = 0
+    if has_down:
+        H = arrays[i].shape[-2]
+        shapes += [(H,), (H,)]
+        i += 3
+    if has_up:
+        U = arrays[i].shape[-2]
+        shapes += [(U,), (U,)]
+        i += 3
+    if has_topk:
+        H2 = arrays[i].shape[-2]
+        shapes += [(H2, K), (H2, K)]
+    return shapes
+
+
+def _call_single(arrays, K, has_down, has_up, has_topk, interpret):
+    kernel = functools.partial(_fused_kernel, K=K, has_down=has_down,
+                               has_up=has_up, has_topk=has_topk,
+                               batched=False)
+    out_shape = [jax.ShapeDtypeStruct(s, jnp.int32)
+                 for s in _out_shapes(arrays, K, has_down, has_up,
+                                      has_topk)]
+    # no grid: one program, whole-array VMEM refs — dispatch.fused_slot
+    # guarantees the operands fit (falls back to staged kernels otherwise)
+    return pl.pallas_call(kernel, out_shape=out_shape,
+                          interpret=interpret)(*arrays)
+
+
+def _call_batch(arrays, K, has_down, has_up, has_topk, interpret):
+    B = arrays[0].shape[0]
+    kernel = functools.partial(_fused_kernel, K=K, has_down=has_down,
+                               has_up=has_up, has_topk=has_topk,
+                               batched=True)
+
+    def spec(shape):
+        return pl.BlockSpec((1,) + shape,
+                            lambda b, nd=len(shape): (b,) + (0,) * nd)
+
+    shapes = _out_shapes(arrays, K, has_down, has_up, has_topk)
+    return pl.pallas_call(
+        kernel,
+        grid=(B,),
+        in_specs=[spec(a.shape[1:]) for a in arrays],
+        out_specs=[spec(s) for s in shapes],
+        out_shape=[jax.ShapeDtypeStruct((B,) + s, jnp.int32)
+                   for s in shapes],
+        interpret=interpret,
+    )(*arrays)
+
+
+@functools.lru_cache(maxsize=None)
+def _fused_fn(K: int, has_down: bool, has_up: bool, has_topk: bool,
+              interpret: bool):
+    """Cached custom-vmap callable for one static stage structure.
+    Calling it plain runs the single-slot kernel; under ``vmap`` (the
+    sweep paths) the rule below swaps in the ``grid=(B,)`` batched
+    variant — one launch per slot for the whole run batch."""
+
+    @jax.custom_batching.custom_vmap
+    def fn(*arrays):
+        return tuple(_call_single(arrays, K, has_down, has_up, has_topk,
+                                  interpret))
+
+    @fn.def_vmap
+    def _rule(axis_size, in_batched, *arrays):  # noqa: ANN001
+        arrays = tuple(
+            a if b else jnp.broadcast_to(a, (axis_size,) + a.shape)
+            for a, b in zip(arrays, in_batched))
+        outs = tuple(_call_batch(arrays, K, has_down, has_up, has_topk,
+                                 interpret))
+        return outs, tuple(True for _ in outs)
+
+    return fn
+
+
+# ---------------------------------------------------------- entry points ---
+
+def fused_slot(down=None, up=None, keys=None, K: int = 0, *,
+               interpret: bool = False):
+    """One fused arbitration slot. All operands pre-padded to exact TPU
+    tile multiples (rows→8, cols→128 — ``dispatch.pad_tiles``):
+
+      down/up  ``(prio, seq, elig)`` with ``BIG``/``BIG``/``False`` pads
+      keys     ``(H, M)`` int32 top-K keys, ``NEG``-padded, with ``K`` ≥ 1
+
+    Returns raw per-stage outputs in stage order:
+    ``[d_prio, d_idx][, u_prio, u_idx][, vals, idx]`` — the same raw
+    convention as ``kernel.priority_arbiter`` / ``kernel.srpt_topk``
+    (callers normalize). Under ``vmap`` this dispatches the batched
+    ``grid=(B,)`` variant via ``custom_vmap``."""
+    arrays = []
+    if down is not None:
+        arrays += list(down)
+    if up is not None:
+        arrays += list(up)
+    if keys is not None:
+        arrays.append(keys)
+    fn = _fused_fn(K, down is not None, up is not None, keys is not None,
+                   interpret)
+    return fn(*arrays)
+
+
+def fused_slot_batch(down=None, up=None, keys=None, K: int = 0, *,
+                     interpret: bool = False):
+    """Explicit batched variant: every operand carries a leading batch
+    axis and the kernel runs with ``grid=(B,)`` — one program per batch
+    element, one launch total. Same raw output convention as
+    :func:`fused_slot` with the batch axis prepended."""
+    arrays = []
+    if down is not None:
+        arrays += list(down)
+    if up is not None:
+        arrays += list(up)
+    if keys is not None:
+        arrays.append(keys)
+    return tuple(_call_batch(tuple(arrays), K, down is not None,
+                             up is not None, keys is not None, interpret))
+
+
+__all__ = ["fused_slot", "fused_slot_batch"]

@@ -1,12 +1,13 @@
-"""Compute-backend tests (DESIGN.md §6).
+"""Compute-backend tests (DESIGN.md §6, §11).
 
-``SimConfig.backend="pallas"`` must be BIT-identical to the reference
-backend for every registered protocol, fabric enabled and disabled. Both
-legs pin against golden snapshots (``tests/golden/fabric_disabled.json``
-from PR 2 and ``fabric_enabled.json`` from this PR), so a divergence
-fails even if both backends drift together. The CI matrix additionally
-runs the whole tier-1 suite under ``SIM_BACKEND=pallas``, which routes
-every simulator test in the repo through the kernels.
+``SimConfig.backend="pallas"`` and ``"pallas_fused"`` must be
+BIT-identical to the reference backend for every registered protocol,
+fabric enabled and disabled. All legs pin against golden snapshots
+(``tests/golden/fabric_disabled.json`` from PR 2 and
+``fabric_enabled.json``), so a divergence fails even if the backends
+drift together. The CI matrix additionally runs the whole tier-1 suite
+under ``SIM_BACKEND=pallas`` and ``SIM_BACKEND=pallas_fused``, which
+routes every simulator test in the repo through the kernels.
 """
 import json
 from pathlib import Path
@@ -20,7 +21,8 @@ from repro.kernels.arbiter import dispatch
 
 GOLDEN = Path(__file__).parent / "golden"
 ALL_PROTOS = ["homa", "basic", "phost", "pias", "pfabric", "ndp"]
-BACKENDS = ["reference", "pallas"]
+BACKENDS = ["reference", "pallas", "pallas_fused"]
+KERNEL_BACKENDS = ["pallas", "pallas_fused"]
 
 
 @pytest.fixture(scope="module")
@@ -59,12 +61,14 @@ def _assert_matches(r, want, fabric: bool):
 
 # ------------------------------------------------ golden bit-identity ------
 
+@pytest.mark.parametrize("backend", KERNEL_BACKENDS)
 @pytest.mark.parametrize("proto", ALL_PROTOS)
-def test_pallas_matches_disabled_golden(disabled, proto):
-    """Fabric OFF: the pallas backend reproduces the pre-fabric golden
-    bit-for-bit for every protocol (acceptance criterion)."""
+def test_pallas_matches_disabled_golden(disabled, proto, backend):
+    """Fabric OFF: the pallas AND pallas_fused backends reproduce the
+    pre-fabric golden bit-for-bit for every protocol (acceptance
+    criterion)."""
     meta, want = disabled["meta"], disabled["protocols"][proto]
-    r = simulate(_cfg(meta, proto, "pallas"), _table(meta))
+    r = simulate(_cfg(meta, proto, backend), _table(meta))
     _assert_matches(r, want, fabric=False)
 
 
@@ -81,15 +85,18 @@ def test_backends_match_enabled_golden(enabled, proto, backend):
     _assert_matches(r, want, fabric=True)
 
 
-def test_pallas_sweep_bit_identical_to_reference():
-    """The pallas backend must survive run_sweep's vmap over tables:
-    batched pallas == sequential reference."""
+@pytest.mark.parametrize("backend", KERNEL_BACKENDS)
+def test_pallas_sweep_bit_identical_to_reference(backend):
+    """The kernel backends must survive run_sweep's vmap over tables:
+    batched pallas/pallas_fused == sequential reference. (For the fused
+    backend the vmap additionally swaps in the batched ``grid=(B,)``
+    mega-kernel via ``custom_vmap`` — DESIGN.md §11.)"""
     tables = [make_messages("W2", n_hosts=8, load=0.6, n_messages=100,
                             slot_bytes=256, seed=s) for s in range(2)]
     ref_cfg = SimConfig(protocol="homa", n_hosts=8, max_slots=2000,
                         ring_cap=256, backend="reference")
     pal_cfg = SimConfig(protocol="homa", n_hosts=8, max_slots=2000,
-                        ring_cap=256, backend="pallas")
+                        ring_cap=256, backend=backend)
     seq = [simulate(ref_cfg, t) for t in tables]
     swe = run_sweep(pal_cfg, SweepSpec(tables=tables))
     for a, b in zip(seq, swe):
@@ -104,6 +111,8 @@ def test_backend_env_default(monkeypatch):
     assert SimConfig().backend == "reference"
     monkeypatch.setenv("SIM_BACKEND", "pallas")
     assert SimConfig().backend == "pallas"
+    monkeypatch.setenv("SIM_BACKEND", "pallas_fused")
+    assert SimConfig().backend == "pallas_fused"
     # an explicit argument beats the environment
     assert SimConfig(backend="reference").backend == "reference"
 

@@ -1,0 +1,141 @@
+"""Cross-backend differential fuzz harness (DESIGN.md §11).
+
+``simulate()`` must be BIT-identical across ``reference`` / ``pallas`` /
+``pallas_fused`` for every configuration the simulator accepts — the
+fused mega-kernel reorders reductions across kernel launches, and this
+harness is what makes that safe. Two layers:
+
+  * a fixed matrix of hand-picked corner configurations (protocol ×
+    fabric × host preset × faults × ragged shapes) that always runs;
+  * a hypothesis-driven fuzzer over random ``SimConfig``s that runs
+    wherever hypothesis is installed (CI; the conftest stub skips it
+    elsewhere), shrinking failures and printing the offender as a
+    reproducible ``SimConfig``/``make_messages`` literal.
+
+Every failure message contains a copy-pasteable repro, e.g.::
+
+    SimConfig(protocol='phost', n_hosts=6, max_slots=400, ring_cap=100,
+              overcommit=2, fabric=FabricConfig(racks=2, oversub=2.0,
+              up_cap=64), host='kernel_stack', backend='pallas_fused')
+    make_messages('W2', n_hosts=6, load=0.8, n_messages=40,
+                  slot_bytes=256, seed=17)
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import SimConfig, FabricConfig, simulate, make_messages
+from repro.core.fabric import FaultConfig
+
+PROTOCOLS = ["homa", "basic", "phost", "pias", "pfabric", "ndp"]
+BACKENDS = ["reference", "pallas", "pallas_fused"]
+
+# fields every backend pair must agree on bit-for-bit
+FIELDS = ["completion", "q_max_bytes", "prio_drained_bytes"]
+FABRIC_FIELDS = ["tor_up_q_max_bytes"]
+FAULT_FIELDS = ["retx_chunks", "msg_lost_chunks"]
+
+
+def _fabric(mode: int, n_hosts: int, faults: bool):
+    """0 = single switch; 1 = 2 racks; 2 = one host per rack."""
+    if mode == 0:
+        return None
+    fl = FaultConfig(up_loss=0.01, down_loss=0.005, seed=3,
+                     resend_slots=60, sender_timeout_slots=150) \
+        if faults else None
+    racks = 2 if mode == 1 else n_hosts
+    return FabricConfig(racks=racks, oversub=2.0, up_cap=64, faults=fl)
+
+
+def _literal(cfg_kw: dict, tbl_kw: dict) -> str:
+    cfg_args = ", ".join(f"{k}={v!r}" for k, v in cfg_kw.items())
+    tbl_args = ", ".join(f"{k}={v!r}" for k, v in tbl_kw.items())
+    return (f"\n  repro:\n    SimConfig({cfg_args})\n"
+            f"    make_messages({tbl_args})")
+
+
+def _run_all(cfg_kw: dict, tbl_kw: dict):
+    tbl = make_messages(**tbl_kw)
+    results = {}
+    for backend in BACKENDS:
+        results[backend] = simulate(SimConfig(backend=backend, **cfg_kw),
+                                    tbl)
+    return results
+
+
+def _assert_identical(cfg_kw: dict, tbl_kw: dict):
+    results = _run_all(cfg_kw, tbl_kw)
+    ref = results["reference"]
+    fields = list(FIELDS)
+    if cfg_kw.get("fabric") is not None:
+        fields += FABRIC_FIELDS
+        if cfg_kw["fabric"].faults is not None:
+            fields += FAULT_FIELDS
+    for backend in ("pallas", "pallas_fused"):
+        r = results[backend]
+        assert r.lost_chunks == ref.lost_chunks, (
+            f"{backend} lost_chunks {r.lost_chunks} != "
+            f"{ref.lost_chunks}" + _literal(
+                {**cfg_kw, "backend": backend}, tbl_kw))
+        for f in fields:
+            a, b = getattr(ref, f), getattr(r, f)
+            if not np.array_equal(a, b):
+                i = np.flatnonzero(np.asarray(a) != np.asarray(b))[:5]
+                raise AssertionError(
+                    f"{backend} diverges from reference on {f} at "
+                    f"indices {i.tolist()}" + _literal(
+                        {**cfg_kw, "backend": backend}, tbl_kw))
+
+
+# ----------------------------------------------------- fixed corner grid ---
+
+CORNERS = [
+    # (proto, n_hosts, fabric_mode, host, faults, ring_cap, overcommit)
+    ("homa",    8, 0, None,            False, 256, None),
+    ("homa",    8, 1, "kernel_stack",  True,  100, 2),
+    ("basic",   6, 1, None,            False, 64,  None),
+    ("phost",   8, 2, "kernel_bypass", False, 256, 1),
+    ("pias",    4, 0, "kernel_stack",  False, 7,   None),
+    ("pfabric", 8, 1, None,            True,  256, None),
+    ("ndp",     6, 2, "kernel_bypass", False, 100, None),
+    ("homa",   12, 2, None,            True,  64,  7),
+]
+
+
+@pytest.mark.parametrize("case", CORNERS,
+                         ids=lambda c: f"{c[0]}-h{c[1]}-fab{c[2]}")
+def test_differential_corner(case):
+    """Hand-picked corners of the config space — run on every machine,
+    hypothesis or not."""
+    proto, n_hosts, fab_mode, host, faults, ring_cap, overcommit = case
+    cfg_kw = dict(protocol=proto, n_hosts=n_hosts, max_slots=500,
+                  ring_cap=ring_cap, overcommit=overcommit,
+                  fabric=_fabric(fab_mode, n_hosts, faults), host=host)
+    tbl_kw = dict(workload="W2", n_hosts=n_hosts, load=0.8,
+                  n_messages=40, slot_bytes=256, seed=11)
+    _assert_identical(cfg_kw, tbl_kw)
+
+
+# -------------------------------------------------------- hypothesis fuzz --
+
+@settings(max_examples=10, deadline=None)
+@given(st.sampled_from(PROTOCOLS),
+       st.sampled_from([4, 6, 8]),          # n_hosts (even: racks divide)
+       st.integers(0, 2),                   # fabric mode
+       st.sampled_from([None, "kernel_stack", "kernel_bypass"]),
+       st.booleans(),                       # faults (fabric only)
+       st.sampled_from([7, 100, 256]),      # ring_cap (ragged cols)
+       st.sampled_from([None, 1, 2, 7]),    # overcommit (K sweep)
+       st.sampled_from(["W1", "W2", "W4"]),
+       st.integers(0, 999))                 # table seed
+def test_differential_fuzz(proto, n_hosts, fab_mode, host, faults,
+                           ring_cap, overcommit, workload, seed):
+    """Random SimConfigs: protocol × fabric on/off × host preset ×
+    faults × ragged H/cap shapes, all three backends bit-identical.
+    Failures shrink and print a reproducible config literal."""
+    cfg_kw = dict(protocol=proto, n_hosts=n_hosts, max_slots=400,
+                  ring_cap=ring_cap, overcommit=overcommit,
+                  fabric=_fabric(fab_mode, n_hosts, faults), host=host)
+    tbl_kw = dict(workload=workload, n_hosts=n_hosts, load=0.8,
+                  n_messages=30, slot_bytes=256, seed=seed)
+    _assert_identical(cfg_kw, tbl_kw)

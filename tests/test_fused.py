@@ -1,0 +1,297 @@
+"""Fused mega-kernel tests (DESIGN.md §11).
+
+Three layers, mirroring the satellite checklist:
+
+  1. the shared pad-and-tile policy in ``dispatch.pad_tiles`` /
+     ``pad_min_cols`` (rows→8, cols→128, M<K NEG-sentinel fill) — the
+     one helper behind ``arbitrate``, ``topk`` AND ``fused_slot``;
+  2. fused-kernel edge cases — all-ineligible slots, single-host racks,
+     cap not a block multiple, K > eligible messages, the empty-grant-set
+     slot — each stage of ``dispatch.fused_slot`` asserted equal to the
+     STAGED path (``pallas_arbitrate``/``pallas_topk``/the pure-jnp
+     oracles), not just end-to-end;
+  3. the batched slots-per-invocation variant: ``fused_slot_batch`` ==
+     ``vmap(fused_slot)`` == stacked single calls, including the
+     ``custom_vmap`` rewrite the sweep path relies on.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.arbiter import dispatch, fused
+from repro.kernels.arbiter.kernel import BIG, NEG
+from repro.kernels.arbiter.ref import priority_arbiter_ref, srpt_topk_ref
+
+
+def _drain_problem(rng, H, cap, frac=0.3):
+    prio = jnp.asarray(rng.integers(0, 8, (H, cap)), jnp.int32)
+    seq = jnp.asarray(rng.integers(0, 4096, (H, cap)), jnp.int32)
+    elig = jnp.asarray(rng.random((H, cap)) < frac)
+    return prio, seq, elig
+
+
+def _keys(rng, H, M, frac=0.5):
+    k = jnp.asarray(rng.integers(1, 1 << 20, (H, M)), jnp.int32)
+    return jnp.where(jnp.asarray(rng.random((H, M)) < frac), k, 0)
+
+
+def _assert_stages(out, down=None, up=None, topk=None):
+    """Every present fused stage == the staged reference oracle."""
+    if down is not None:
+        bp, bi = priority_arbiter_ref(*down)
+        np.testing.assert_array_equal(out["down"][0], bp)
+        np.testing.assert_array_equal(out["down"][1], bi)
+    if up is not None:
+        bp, bi = priority_arbiter_ref(*up)
+        np.testing.assert_array_equal(out["up"][0], bp)
+        np.testing.assert_array_equal(out["up"][1], bi)
+    if topk is not None:
+        vals, idx = srpt_topk_ref(*topk)
+        np.testing.assert_array_equal(out["topk"][0], vals)
+        np.testing.assert_array_equal(out["topk"][1], idx)
+
+
+# ----------------------------------------------- shared pad-and-tile -------
+
+@pytest.mark.parametrize("H,C,Hp,Cp", [
+    (1, 1, 8, 128),        # minimum pads up to one full tile
+    (8, 128, 8, 128),      # exact multiples pass through
+    (13, 100, 16, 128),    # ragged both ways
+    (16, 1000, 16, 1024),  # cols round up to the 128 multiple
+])
+def test_pad_tiles_rounds_to_tpu_tile(H, C, Hp, Cp):
+    """Rows pad to the 8-sublane multiple, columns to the 128-lane
+    multiple — the policy every kernel wrapper shares."""
+    a = jnp.zeros((H, C), jnp.int32)
+    (p,), (bh, bc) = dispatch.pad_tiles((a,), (BIG,))
+    assert p.shape == (Hp, Cp)
+    assert Hp % 8 == 0 and Cp % 128 == 0
+    # block sizes tile the padded dims exactly
+    assert Hp % bh == 0 and Cp % bc == 0
+
+
+def test_pad_tiles_fill_values_per_array():
+    """Each array pads with its own can't-win sentinel."""
+    prio = jnp.ones((3, 5), jnp.int32)
+    seq = jnp.full((3, 5), 7, jnp.int32)
+    elig = jnp.ones((3, 5), bool)
+    (pp, sp, ep), _ = dispatch.pad_tiles((prio, seq, elig),
+                                         (BIG, BIG, False))
+    assert int(pp[0, 5]) == BIG and int(pp[3, 0]) == BIG
+    assert int(sp[0, 5]) == BIG
+    assert not bool(ep[0, 5]) and not bool(ep[3, 0])
+    # original content survives
+    np.testing.assert_array_equal(pp[:3, :5], prio)
+
+
+def test_pad_tiles_col_pref_caps_block():
+    a = jnp.zeros((8, 1024), jnp.int32)
+    _, (_, bc256) = dispatch.pad_tiles((a,), (0,), col_pref=256)
+    _, (_, bc512) = dispatch.pad_tiles((a,), (0,), col_pref=512)
+    assert bc256 == 256 and bc512 == 512
+
+
+def test_pad_min_cols_uses_neg_sentinel():
+    """M < K widens with NEG — NOT zero: 0 is a legitimate (ineligible)
+    key and must outrank padding so indices stay in-bounds."""
+    keys = jnp.zeros((2, 3), jnp.int32)
+    wide = dispatch.pad_min_cols(keys, 5)
+    assert wide.shape == (2, 5)
+    assert int(wide[0, 3]) == NEG and int(wide[1, 4]) == NEG
+    # wide-enough input passes through untouched
+    assert dispatch.pad_min_cols(keys, 3) is keys
+
+
+def test_padded_wrappers_still_match_ref():
+    """pallas_arbitrate / pallas_topk on top of the SHARED helper keep
+    their original contracts (regression for the refactor)."""
+    rng = np.random.default_rng(0)
+    down = _drain_problem(rng, 13, 100)
+    bp, bi = dispatch.pallas_arbitrate(*down, interpret=True)
+    rbp, rbi = priority_arbiter_ref(*down)
+    np.testing.assert_array_equal(bp, rbp)
+    np.testing.assert_array_equal(bi, rbi)
+    keys = _keys(rng, 5, 37)
+    vals, idx = dispatch.pallas_topk(keys, 4, interpret=True)
+    rv, ri = srpt_topk_ref(keys, 4)
+    np.testing.assert_array_equal(vals, rv)
+    np.testing.assert_array_equal(idx, ri)
+
+
+# ---------------------------------------------------- fused edge cases -----
+
+def test_fused_all_stages_random():
+    rng = np.random.default_rng(1)
+    down = _drain_problem(rng, 16, 256)
+    up = _drain_problem(rng, 8, 64)
+    keys = _keys(rng, 16, 300)
+    out = dispatch.fused_slot(down=down, up=up, topk=(keys, 4),
+                              interpret=True)
+    _assert_stages(out, down=down, up=up, topk=(keys, 4))
+
+
+def test_fused_all_ineligible_slots():
+    """No eligible entry anywhere: drains return (BIG, 0), the grant set
+    is empty — exactly the staged sentinels."""
+    rng = np.random.default_rng(2)
+    p, s, _ = _drain_problem(rng, 8, 128)
+    none = jnp.zeros_like(p, bool)
+    keys = jnp.zeros((8, 64), jnp.int32)
+    out = dispatch.fused_slot(down=(p, s, none), up=(p, s, none),
+                              topk=(keys, 3), interpret=True)
+    _assert_stages(out, down=(p, s, none), up=(p, s, none),
+                   topk=(keys, 3))
+    assert bool((out["down"][0] == BIG).all())
+    assert bool((out["down"][1] == 0).all())
+    assert bool((out["topk"][1] == -1).all())
+
+
+def test_fused_single_host_racks():
+    """racks == n_hosts means one host per rack: every uplink row serves
+    a single source, the smallest-U shape the fabric can produce."""
+    rng = np.random.default_rng(3)
+    down = _drain_problem(rng, 8, 256)
+    up = _drain_problem(rng, 8, 32, frac=0.15)   # U = racks * 1 uplink
+    out = dispatch.fused_slot(down=down, up=up, interpret=True)
+    _assert_stages(out, down=down, up=up)
+
+
+@pytest.mark.parametrize("cap", [1, 37, 100, 129])
+def test_fused_cap_not_block_multiple(cap):
+    rng = np.random.default_rng(cap)
+    down = _drain_problem(rng, 5, cap)
+    out = dispatch.fused_slot(down=down, interpret=True)
+    _assert_stages(out, down=down)
+
+
+def test_fused_k_exceeds_eligible():
+    """K larger than the eligible message count (and than M itself):
+    surplus ranks come back (0, -1), like the staged kernel."""
+    rng = np.random.default_rng(5)
+    keys = _keys(rng, 4, 6, frac=0.4)
+    out = dispatch.fused_slot(topk=(keys, 9), interpret=True)
+    _assert_stages(out, topk=(keys, 9))
+    n_elig = np.asarray((keys > 0).sum(axis=1))
+    got_valid = np.asarray((out["topk"][0] > 0).sum(axis=1))
+    np.testing.assert_array_equal(got_valid, n_elig)
+
+
+def test_fused_empty_grant_set():
+    """A slot where no receiver has anything to grant (all keys 0)."""
+    keys = jnp.zeros((8, 128), jnp.int32)
+    out = dispatch.fused_slot(topk=(keys, 4), interpret=True)
+    _assert_stages(out, topk=(keys, 4))
+    assert bool((out["topk"][0] == 0).all())
+    assert bool((out["topk"][1] == -1).all())
+
+
+def test_fused_vmem_fallback_bit_identical(monkeypatch):
+    """Oversized operands fall back to the staged kernels — same
+    answers, enforced by shrinking the limit to force the fallback."""
+    rng = np.random.default_rng(6)
+    down = _drain_problem(rng, 8, 256)
+    keys = _keys(rng, 8, 100)
+    want = dispatch.fused_slot(down=down, topk=(keys, 3), interpret=True)
+    monkeypatch.setattr(dispatch, "FUSED_VMEM_LIMIT_BYTES", 1)
+    got = dispatch.fused_slot(down=down, topk=(keys, 3), interpret=True)
+    for stage in ("down", "topk"):
+        np.testing.assert_array_equal(want[stage][0], got[stage][0])
+        np.testing.assert_array_equal(want[stage][1], got[stage][1])
+
+
+# ------------------------------------------------------- batched variant ---
+
+def test_fused_batch_matches_single_and_vmap():
+    """fused_slot_batch == vmap(fused_slot) == per-element single calls,
+    and the vmap actually routes through the batched ``grid=(B,)``
+    kernel (the custom_vmap rewrite the sweep path depends on)."""
+    rng = np.random.default_rng(7)
+    B, H, C, M, K = 5, 8, 128, 64, 3
+    prio = jnp.asarray(rng.integers(0, 8, (B, H, C)), jnp.int32)
+    seq = jnp.asarray(rng.integers(0, 4096, (B, H, C)), jnp.int32)
+    elig = jnp.asarray(rng.random((B, H, C)) < 0.3)
+    keys = jnp.asarray(
+        np.where(rng.random((B, H, M)) < 0.5,
+                 rng.integers(1, 1 << 20, (B, H, M)), 0), jnp.int32)
+
+    batched = fused.fused_slot_batch(down=(prio, seq, elig), keys=keys,
+                                     K=K, interpret=True)
+
+    calls = {"batch": 0}
+    orig = fused._call_batch
+
+    def counting(*a, **k):
+        calls["batch"] += 1
+        return orig(*a, **k)
+
+    fused._fused_fn.cache_clear()
+    try:
+        fused._call_batch = counting
+        vmapped = jax.vmap(lambda p, s, e, m: fused.fused_slot(
+            down=(p, s, e), keys=m, K=K, interpret=True))(
+                prio, seq, elig, keys)
+    finally:
+        fused._call_batch = orig
+        fused._fused_fn.cache_clear()
+    assert calls["batch"] >= 1, "vmap did not take the batched kernel"
+
+    for a, b in zip(batched, vmapped):
+        np.testing.assert_array_equal(a, b)
+    for i in range(B):
+        single = fused.fused_slot(down=(prio[i], seq[i], elig[i]),
+                                  keys=keys[i], K=K, interpret=True)
+        for a, s in zip(batched, single):
+            np.testing.assert_array_equal(a[i], s)
+
+
+def test_fused_batch_broadcasts_unbatched_operands():
+    """custom_vmap rule broadcasts operands closed over the batch axis
+    (e.g. a shared eligibility mask constant inside a vmapped trace)."""
+    rng = np.random.default_rng(8)
+    B, H, C = 3, 8, 128
+    prio = jnp.asarray(rng.integers(0, 8, (B, H, C)), jnp.int32)
+    shared_seq = jnp.asarray(rng.integers(0, 4096, (H, C)), jnp.int32)
+    elig = jnp.asarray(rng.random((B, H, C)) < 0.4)
+    out = jax.vmap(lambda p, e: fused.fused_slot(
+        down=(p, shared_seq, e), interpret=True))(prio, elig)
+    for i in range(B):
+        bp, bi = priority_arbiter_ref(prio[i], shared_seq, elig[i])
+        np.testing.assert_array_equal(out[0][i], bp)
+        np.testing.assert_array_equal(out[1][i], bi)
+
+
+# -------------------------------------------- end-to-end edge configs ------
+
+def test_fused_sim_single_host_racks():
+    """End-to-end: a fabric with one host per rack is bit-identical
+    across reference and fused backends."""
+    from repro.core import SimConfig, FabricConfig, simulate, make_messages
+    tbl = make_messages("W2", n_hosts=8, load=0.7, n_messages=80,
+                        slot_bytes=256, seed=9)
+    fab = FabricConfig(racks=8, oversub=2.0, up_cap=64)
+    res = {}
+    for b in ("reference", "pallas_fused"):
+        res[b] = simulate(SimConfig(protocol="homa", n_hosts=8,
+                                    max_slots=1500, ring_cap=256,
+                                    fabric=fab, backend=b), tbl)
+    np.testing.assert_array_equal(res["reference"].completion,
+                                  res["pallas_fused"].completion)
+    np.testing.assert_array_equal(res["reference"].tor_up_q_max_bytes,
+                                  res["pallas_fused"].tor_up_q_max_bytes)
+
+
+def test_fused_zero_delay_falls_back_staged():
+    """net_delay_slots=0 breaks the hoist precondition, so the fused
+    backend must skip fusing the downlink stage (falling back to the
+    staged kernel at its usual point) and stay bit-identical."""
+    from repro.core import SimConfig, simulate, make_messages
+    tbl = make_messages("W2", n_hosts=8, load=0.7, n_messages=60,
+                        slot_bytes=256, seed=10)
+    res = {}
+    for b in ("reference", "pallas_fused"):
+        res[b] = simulate(SimConfig(protocol="homa", n_hosts=8,
+                                    max_slots=1200, ring_cap=256,
+                                    net_delay_slots=0, backend=b), tbl)
+    np.testing.assert_array_equal(res["reference"].completion,
+                                  res["pallas_fused"].completion)
